@@ -1,0 +1,98 @@
+"""Paper Fig. 5 / Table 2 accuracy benchmarks on the synthetic datasets.
+
+Default is --quick (one dataset, two scenarios) so ``benchmarks.run`` stays
+CPU-tractable; the full 48-scenario sweep is ``--full`` (hours on 1 core).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from repro.core import pipeline, splitnn, vfedtrans
+from repro.data.synthetic import (ALIGNED_SCENARIOS, PAPER_METRIC,
+                                  make_dataset)
+from repro.data.vertical import make_scenario
+
+
+def bench_scenarios(dataset: str, aligns, feats, max_epochs: int,
+                    seed: int = 0, csv=True):
+    ds = make_dataset(dataset, seed=seed)
+    metric = PAPER_METRIC[dataset]
+    rows = []
+    for n_al in aligns:
+        for a in feats:
+            sc = make_scenario(ds, n_active_features=a, n_aligned=n_al,
+                               seed=seed)
+            t0 = time.time()
+            loc = pipeline.run_local_baseline(sc, seed=seed)[metric]
+            ab = pipeline.run_apcvfl(sc, ablation=True,
+                                     max_epochs=max_epochs).metrics[metric]
+            r = pipeline.run_apcvfl(sc, max_epochs=max_epochs)
+            vt = vfedtrans.run_vfedtrans(sc, max_epochs=max_epochs)
+            us = (time.time() - t0) * 1e6
+            derived = (f"local={loc:.4f}|ablation={ab:.4f}|"
+                       f"apcvfl={r.metrics[metric]:.4f}|"
+                       f"vfedtrans={vt.metrics[metric]:.4f}|"
+                       f"apcvfl_MB={r.channel.total_mb():.2f}|"
+                       f"vfedtrans_MB={vt.channel.total_mb():.2f}")
+            name = f"accuracy/{dataset}/al{n_al}/a{a}"
+            if csv:
+                print(f"{name},{us:.0f},{derived}", flush=True)
+            rows.append({"name": name, "metric": metric, "local": loc,
+                         "ablation": ab, "apcvfl": r.metrics[metric],
+                         "vfedtrans": vt.metrics[metric],
+                         "apcvfl_MB": r.channel.total_mb(),
+                         "vfedtrans_MB": vt.channel.total_mb()})
+    return rows
+
+
+def bench_splitnn(dataset: str, aligns, max_epochs: int, seed=0, csv=True):
+    """Table 2: classical fully-aligned comparison."""
+    ds = make_dataset(dataset, seed=seed)
+    metric = PAPER_METRIC[dataset]
+    test_size = 50 if dataset == "bcw" else 500
+    rows = []
+    for n_al in aligns:
+        sc = make_scenario(ds, n_active_features=5, n_aligned=n_al, seed=seed)
+        t0 = time.time()
+        sn = splitnn.run_splitnn(sc, max_epochs=max_epochs,
+                                 test_size=test_size, seed=seed)
+        apc = pipeline.run_apcvfl_aligned_only(sc, max_epochs=max_epochs,
+                                               test_size=test_size, seed=seed)
+        us = (time.time() - t0) * 1e6
+        derived = (f"splitnn={sn.metrics[metric]:.4f}|"
+                   f"apcvfl={apc['metrics'][metric]:.4f}|"
+                   f"splitnn_rounds={sn.rounds}|apcvfl_rounds=1|"
+                   f"splitnn_MB={sn.comm_bytes/2**20:.2f}|"
+                   f"apcvfl_MB={apc['channel'].total_mb():.2f}")
+        name = f"table2/{dataset}/al{n_al}"
+        if csv:
+            print(f"{name},{us:.0f},{derived}", flush=True)
+        rows.append({"name": name, "splitnn": sn.metrics[metric],
+                     "apcvfl": apc["metrics"][metric],
+                     "splitnn_rounds": sn.rounds,
+                     "splitnn_MB": sn.comm_bytes / 2**20})
+    return rows
+
+
+def run(quick=True, max_epochs=40, csv=True):
+    rows = []
+    if quick:
+        rows += bench_scenarios("bcw", [250, 100], [5, 2], max_epochs, csv=csv)
+        rows += bench_splitnn("bcw", [250, 100], max_epochs, csv=csv)
+    else:
+        for dsname in ["mimic3", "bcw", "credit"]:
+            rows += bench_scenarios(dsname, ALIGNED_SCENARIOS[dsname],
+                                    [5, 4, 3, 2], max_epochs, csv=csv)
+            rows += bench_splitnn(dsname, ALIGNED_SCENARIOS[dsname],
+                                  max_epochs, csv=csv)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--max-epochs", type=int, default=40)
+    args = ap.parse_args()
+    run(quick=not args.full, max_epochs=args.max_epochs)

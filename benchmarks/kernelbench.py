@@ -1,0 +1,61 @@
+"""Kernel microbench: wall-time of the jitted jnp reference paths on CPU
+(the Pallas kernels themselves are TPU-target; interpret mode timing is not
+meaningful for perf, so the CSV reports the XLA-compiled reference and the
+kernel/oracle max-abs-error as the derived column)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.kernels.ref import flash_attention_ref, fused_distill_loss_ref
+
+
+def _time(f, *args, n=5):
+    f(*args)  # compile + warm
+    jax.block_until_ready(f(*args))
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = f(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run(csv=True):
+    if csv:
+        print("name,us_per_call,derived")
+    key = jax.random.PRNGKey(0)
+    rows = []
+
+    B, H, S, hd = 2, 4, 512, 64
+    q, k, v = [jax.random.normal(kk, (B, H, S, hd))
+               for kk in jax.random.split(key, 3)]
+    ref = jax.jit(lambda q, k, v: flash_attention_ref(q, k, v, causal=True))
+    us = _time(ref, q, k, v)
+    kern = ops.flash_attention(jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2),
+                               jnp.swapaxes(v, 1, 2), causal=True)
+    err = float(jnp.max(jnp.abs(jnp.swapaxes(kern, 1, 2) - ref(q, k, v))))
+    rows.append(("kernel/flash_attention_ref_cpu", us, f"maxerr={err:.2e}"))
+
+    Bd, D, M = 4096, 32, 256
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (Bd, D))
+    xh = jax.random.normal(ks[1], (Bd, D))
+    z = jax.random.normal(ks[2], (Bd, M))
+    zt = jax.random.normal(ks[3], (Bd, M))
+    mask = (jax.random.uniform(ks[4], (Bd,)) > 0.5).astype(jnp.float32)
+    ref2 = jax.jit(lambda *a: fused_distill_loss_ref(*a, lam=0.01))
+    us2 = _time(ref2, x, xh, z, zt, mask)
+    err2 = float(jnp.abs(ops.fused_distill_loss(x, xh, z, zt, mask)
+                         - ref2(x, xh, z, zt, mask)))
+    rows.append(("kernel/fused_distill_ref_cpu", us2, f"maxerr={err2:.2e}"))
+
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,101 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md section
+"Roofline").
+
+Per (arch x shape x mesh) JSON produced by ``repro.launch.dryrun``:
+  compute term    = HLO_FLOPs / (chips * 197 TFLOP/s)      [bf16 v5e]
+  memory term     = HLO_bytes / (chips * 819 GB/s)
+  collective term = collective_bytes / (chips * 3 links * 50 GB/s)
+(the walker reports per-device numbers, so the chip division is implicit:
+term = per_device_quantity / per_chip_rate).
+
+Also reports MODEL_FLOPS = 6*N(_active)*D against compiled HLO FLOPs —
+the useful-compute fraction that catches remat/redundancy waste.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs.base import HBM_BW, ICI_BW, INPUT_SHAPES, PEAK_FLOPS_BF16
+
+N_LINKS = 3   # ICI links per v5e chip usable concurrently (2D torus + wrap)
+
+
+def model_flops(rec: dict) -> float:
+    """6*N*D for train (fwd+bwd), 2*N*D for inference, per STEP (global)."""
+    shape = INPUT_SHAPES[rec["shape"]]
+    n = rec["active_params"]
+    if shape.mode == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.mode == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch          # decode: one token per row
+
+
+def analyze_record(rec: dict) -> dict:
+    chips = rec["n_chips"]
+    t_comp = rec["hlo_flops_per_device"] / PEAK_FLOPS_BF16
+    t_mem = rec["hlo_bytes_per_device"] / HBM_BW
+    t_coll = rec["collective_bytes_per_device"] / (N_LINKS * ICI_BW)
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dom = max(terms, key=terms.get)
+    mf = model_flops(rec)
+    hlo_global = rec["hlo_flops_per_device"] * chips
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "objective": rec.get("objective", "lm"),
+        "t_compute_s": t_comp, "t_memory_s": t_mem, "t_collective_s": t_coll,
+        "bottleneck": dom,
+        "model_flops": mf,
+        "useful_fraction": mf / hlo_global if hlo_global else 0.0,
+        "mem_temp_gb": rec["mem_temp_bytes"] / 1e9,
+        "mem_args_gb": rec["mem_argument_bytes"] / 1e9,
+        "fits_hbm16": (rec["mem_temp_bytes"] + rec["mem_argument_bytes"])
+        < 16e9,
+        "step_time_bound_s": max(terms.values()),
+    }
+
+
+def run(dryrun_dir: str = "experiments/dryrun", csv: bool = True,
+        mesh_filter: str = "16x16"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as fh:
+            rec = json.load(fh)
+        if mesh_filter and rec.get("mesh") != mesh_filter:
+            continue
+        recs.append(analyze_record(rec))
+    if csv:
+        print("name,us_per_call,derived")
+        for r in recs:
+            tag = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
+            print(f"{tag},{r['step_time_bound_s']*1e6:.0f},"
+                  f"bound={r['bottleneck']}|"
+                  f"Tc={r['t_compute_s']:.3e}|Tm={r['t_memory_s']:.3e}|"
+                  f"Tx={r['t_collective_s']:.3e}|"
+                  f"useful={r['useful_fraction']:.2f}|"
+                  f"fits16G={'Y' if r['fits_hbm16'] else 'N'}")
+    return recs
+
+
+def markdown_table(recs: list) -> str:
+    lines = ["| arch | shape | mesh | compute s | memory s | collective s | "
+             "bottleneck | useful | args GB | temp GB | fits 16G |",
+             "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        arch = r["arch"] + (" (distill)" if r.get("objective") not in
+                            (None, "lm") else "")
+        lines.append(
+            f"| {arch} | {r['shape']} | {r['mesh']} | "
+            f"{r['t_compute_s']:.3e} | {r['t_memory_s']:.3e} | "
+            f"{r['t_collective_s']:.3e} | {r['bottleneck']} | "
+            f"{r['useful_fraction']:.2f} | {r['mem_args_gb']:.1f} | "
+            f"{r['mem_temp_gb']:.1f} | {'Y' if r['fits_hbm16'] else 'N'} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,32 @@
+"""Quickstart: the full APC-VFL protocol end-to-end on a synthetic
+Breast-Cancer-Wisconsin-shaped VFL scenario (2 participants, partial
+alignment). This is the paper's pipeline in ~20 lines of public API.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core import pipeline
+from repro.data.synthetic import make_dataset
+from repro.data.vertical import make_scenario
+
+# 1. a vertically-partitioned scenario: active holds 5 of 30 features +
+#    labels; 250 of ~570 records are aligned between the parties
+ds = make_dataset("bcw", seed=0)
+sc = make_scenario(ds, n_active_features=5, n_aligned=250, seed=0)
+print(f"active: {sc.active.x.shape}, passive: {sc.passive.x.shape}, "
+      f"aligned: {sc.n_aligned}")
+
+# 2. baselines: raw-feature local probe
+local = pipeline.run_local_baseline(sc)
+print(f"local probe accuracy:   {local['accuracy']:.3f}")
+
+# 3. APC-VFL: local representation learning -> ONE exchange ->
+#    joint representation -> distillation -> classifier
+res = pipeline.run_apcvfl(sc, lam=0.01, kind="mse")
+print(f"APC-VFL accuracy:       {res.metrics['accuracy']:.3f}")
+print(f"communication rounds:   {res.rounds} (SplitNN needs hundreds)")
+print(f"bytes exchanged:        {res.channel.total_bytes:,} "
+      f"({res.channel.total_mb():.2f} MB, incl. PSI hashes)")
+print(f"stage epochs:           {res.epochs}")
+
+# 4. the active participant can now run inference fully independently:
+#    z = g3(x_active) -> classifier, no collaborator required.

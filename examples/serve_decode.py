@@ -1,0 +1,61 @@
+"""Batched greedy decoding with a KV cache (full and sliding-window),
+demonstrating the serving path on a reduced config.
+
+Run:  PYTHONPATH=src python examples/serve_decode.py [--arch internlm2-20b]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke
+from repro.models import model as M
+from repro.serve.decode import make_decode_step, prefill_step
+from repro.sharding.policy import init_params
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-20b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--window", type=int, default=0,
+                    help=">0 enables the sliding-window KV cache")
+    args = ap.parse_args()
+
+    cfg = get_smoke(args.arch)
+    key = jax.random.PRNGKey(0)
+    params = init_params(M.schema(cfg), key, jnp.float32)
+    B, P = args.batch, args.prompt_len
+    prompt = jax.random.randint(key, (B, P), 0, cfg.vocab_size)
+
+    # prefill: teacher-forced pass over the prompt via per-token decode
+    # (the jitted full-forward prefill_step is used for last-token logits)
+    n_slots = args.window or (P + args.new_tokens)
+    img = (jax.random.normal(key, (B, cfg.n_image_tokens, cfg.d_model))
+           if cfg.family == "vlm" else None)
+    cache = M.init_cache(params, cfg, B, n_slots, image_embeds=img)
+    step = jax.jit(make_decode_step(cfg, args.window))
+
+    t0 = time.time()
+    tok = prompt[:, 0]
+    for t in range(P - 1):
+        tok, cache = step(params, prompt[:, t], cache, jnp.int32(t))
+    generated = []
+    tok = prompt[:, -1]
+    for t in range(P - 1, P + args.new_tokens - 1):
+        tok, cache = step(params, tok, cache, jnp.int32(t))
+        generated.append(tok)
+    gen = jnp.stack(generated, axis=1)
+    dt = time.time() - t0
+    total_steps = P - 1 + args.new_tokens
+    print(f"arch={cfg.name} (reduced) window={args.window or 'full'}")
+    print(f"decoded {args.new_tokens} tokens x batch {B} "
+          f"in {dt:.2f}s ({1e3*dt/total_steps:.1f} ms/step)")
+    print("sample:", gen[0, :16].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""Train a (reduced) assigned-architecture LM on the synthetic Markov token
+stream — the distributed-runtime path of the framework, CPU-sized.
+
+Run:  PYTHONPATH=src python examples/train_lm.py --arch qwen3-moe-30b-a3b
+"""
+import subprocess
+import sys
+
+if __name__ == "__main__":
+    arch = "internlm2-1.8b"
+    if "--arch" in sys.argv:
+        arch = sys.argv[sys.argv.index("--arch") + 1]
+    subprocess.run([sys.executable, "-m", "repro.launch.train",
+                    "--arch", arch, "--smoke", "--steps", "40",
+                    "--batch", "8", "--seq", "128",
+                    "--ckpt", "/tmp/repro_lm_ckpt.npz"], check=True)

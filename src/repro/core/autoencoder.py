@@ -1,0 +1,62 @@
+"""Symmetric MLP autoencoders (paper Table 3, SELU activations).
+
+Encoder layer widths are given per Table 3; the decoder mirrors them in
+reverse ("all autoencoders considered in APC-VFL are symmetric").  The
+linear latent layer (no activation on the last encoder layer) follows the
+overcomplete-autoencoder usage in the paper.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def table3_encoder(role: str, n_features: int) -> list:
+    """Paper Table 3 widths. role: g1_active|g1_passive|g2|g3."""
+    return {
+        "g1_active": [n_features, 64, 128],
+        "g1_passive": [n_features, 128, 256],
+        "g2": [n_features, 256, 256],
+        "g3": [n_features, 256, 256],
+    }[role]
+
+
+def init_mlp(key, widths: Sequence[int]) -> dict:
+    params = {}
+    keys = jax.random.split(key, len(widths) - 1)
+    for i, (a, b) in enumerate(zip(widths[:-1], widths[1:])):
+        # LeCun normal — the recommended init for SELU networks
+        params[f"w{i}"] = jax.random.normal(keys[i], (a, b)) / np.sqrt(a)
+        params[f"b{i}"] = jnp.zeros((b,))
+    return params
+
+
+def mlp_apply(params: dict, x: jax.Array, *, final_act: bool = False) -> jax.Array:
+    n = len([k for k in params if k.startswith("w")])
+    for i in range(n):
+        x = x @ params[f"w{i}"] + params[f"b{i}"]
+        if i < n - 1 or final_act:
+            x = jax.nn.selu(x)
+    return x
+
+
+def init_autoencoder(key, enc_widths: Sequence[int]) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {"enc": init_mlp(k1, list(enc_widths)),
+            "dec": init_mlp(k2, list(enc_widths)[::-1])}
+
+
+def encode(params: dict, x: jax.Array) -> jax.Array:
+    return mlp_apply(params["enc"], x)
+
+
+def reconstruct(params: dict, x: jax.Array) -> jax.Array:
+    return mlp_apply(params["dec"], encode(params, x))
+
+
+def recon_loss(params: dict, batch: dict) -> jax.Array:
+    x = batch["x"]
+    return jnp.mean(jnp.square(x - reconstruct(params, x)))

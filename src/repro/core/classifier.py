@@ -1,0 +1,103 @@
+"""Logistic-regression probe (paper Sec. 5 "Models": linear probing) +
+k-fold cross-validation and F1/accuracy metrics (micro/macro/weighted)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def init_logreg(key, n_features: int, n_classes: int) -> dict:
+    return {"w": jnp.zeros((n_features, n_classes)),
+            "b": jnp.zeros((n_classes,))}
+
+
+def logreg_logits(params: dict, x: jax.Array) -> jax.Array:
+    return x @ params["w"] + params["b"]
+
+
+def logreg_loss(params: dict, batch: dict) -> jax.Array:
+    logits = logreg_logits(params, batch["x"])
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, batch["y"][:, None], axis=-1)[:, 0]
+    l2 = 1e-4 * jnp.sum(jnp.square(params["w"]))
+    return jnp.mean(lse - gold) + l2
+
+
+@partial(jax.jit, static_argnames=("n_classes", "steps", "lr"))
+def fit_logreg(x, y, n_classes: int, steps: int = 300, lr: float = 0.1):
+    """Full-batch Adam logistic regression (fast jit'd probe)."""
+    params = {"w": jnp.zeros((x.shape[1], n_classes)),
+              "b": jnp.zeros((n_classes,))}
+    m = jax.tree.map(jnp.zeros_like, params)
+    v = jax.tree.map(jnp.zeros_like, params)
+
+    def step(carry, t):
+        params, m, v = carry
+        g = jax.grad(logreg_loss)(params, {"x": x, "y": y})
+        b1, b2, eps = 0.9, 0.999, 1e-8
+        m = jax.tree.map(lambda m_, g_: b1 * m_ + (1 - b1) * g_, m, g)
+        v = jax.tree.map(lambda v_, g_: b2 * v_ + (1 - b2) * g_ * g_, v, g)
+        tf = (t + 1).astype(jnp.float32)
+        params = jax.tree.map(
+            lambda p, m_, v_: p - lr * (m_ / (1 - 0.9 ** tf)) /
+            (jnp.sqrt(v_ / (1 - 0.999 ** tf)) + eps), params, m, v)
+        return (params, m, v), None
+
+    (params, _, _), _ = jax.lax.scan(step, (params, m, v),
+                                     jnp.arange(steps))
+    return params
+
+
+def predict(params: dict, x) -> np.ndarray:
+    return np.asarray(jnp.argmax(logreg_logits(params, jnp.asarray(x)),
+                                 axis=-1))
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+def f1_scores(y_true: np.ndarray, y_pred: np.ndarray, n_classes: int) -> dict:
+    """Returns micro/macro/weighted F1 and accuracy."""
+    y_true = np.asarray(y_true)
+    y_pred = np.asarray(y_pred)
+    tp = np.zeros(n_classes)
+    fp = np.zeros(n_classes)
+    fn = np.zeros(n_classes)
+    support = np.zeros(n_classes)
+    for c in range(n_classes):
+        tp[c] = np.sum((y_pred == c) & (y_true == c))
+        fp[c] = np.sum((y_pred == c) & (y_true != c))
+        fn[c] = np.sum((y_pred != c) & (y_true == c))
+        support[c] = np.sum(y_true == c)
+    denom = 2 * tp + fp + fn
+    f1c = np.where(denom > 0, 2 * tp / np.maximum(denom, 1), 0.0)
+    micro_d = 2 * tp.sum() + fp.sum() + fn.sum()
+    return {
+        "accuracy": float(np.mean(y_true == y_pred)),
+        "f1_micro": float(2 * tp.sum() / micro_d) if micro_d else 0.0,
+        "f1_macro": float(np.mean(f1c)),
+        "f1_weighted": float(np.sum(f1c * support) / max(support.sum(), 1)),
+        # binary convention (positive class = 1), used for UCI credit card
+        "f1_binary": float(f1c[1]) if n_classes == 2 else float(np.mean(f1c)),
+    }
+
+
+def kfold_cv(x: np.ndarray, y: np.ndarray, n_classes: int, *, k: int = 10,
+             seed: int = 0) -> dict:
+    """Paper evaluation: 10-fold CV of the logistic probe; mean metrics."""
+    n = len(x)
+    rng = np.random.RandomState(seed)
+    perm = rng.permutation(n)
+    folds = np.array_split(perm, k)
+    accs = []
+    for i in range(k):
+        te = folds[i]
+        tr = np.concatenate([folds[j] for j in range(k) if j != i])
+        params = fit_logreg(jnp.asarray(x[tr]), jnp.asarray(y[tr]), n_classes)
+        pred = predict(params, x[te])
+        accs.append(f1_scores(y[te], pred, n_classes))
+    return {k_: float(np.mean([a[k_] for a in accs])) for k_ in accs[0]}

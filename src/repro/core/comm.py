@@ -1,0 +1,80 @@
+"""Communication accounting: a simulated peer-to-peer channel that records
+every transfer, plus the paper's analytic footprint formulas (Appendix E).
+
+All analytic formulas assume 4-byte floats, as in the paper.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from math import ceil
+
+
+@dataclass
+class Channel:
+    """Byte- and round-accounting for a logical link between two parties."""
+    log: list = field(default_factory=list)
+
+    def send(self, what: str, nbytes: int):
+        self.log.append((what, int(nbytes)))
+
+    def send_array(self, what: str, arr):
+        self.send(what, arr.size * 4)   # paper: 4 bytes/element
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(b for _, b in self.log)
+
+    @property
+    def rounds(self) -> int:
+        return len(self.log)
+
+    def total_mb(self) -> float:
+        return self.total_bytes / 1e6
+
+
+# --- Appendix E.1: APC-VFL -------------------------------------------------
+
+def apcvfl_footprint_bytes(n_aligned: int, z_p: int = 256) -> int:
+    """Eq. 6: one exchange of Z_A in R^{|D_A| x z_p}."""
+    return n_aligned * z_p * 4
+
+
+# --- Appendix E.2: SplitNN -------------------------------------------------
+
+def splitnn_forward_bytes(epochs: int, n_aligned: int, z_p: int = 256) -> int:
+    """Eq. 7."""
+    return epochs * n_aligned * z_p * 4
+
+
+def splitnn_backprop_bytes(epochs: int, n_aligned: int, batch_size: int,
+                           p_params: int = 128 * 256 + 256) -> int:
+    """Eq. 8: gradients w.r.t. the final passive-encoder layer, per batch."""
+    return epochs * ceil(n_aligned / batch_size) * p_params * 4
+
+
+def splitnn_footprint_bytes(epochs: int, n_aligned: int, batch_size: int,
+                            z_p: int = 256,
+                            p_params: int = 128 * 256 + 256) -> int:
+    """Eq. 9."""
+    return (splitnn_forward_bytes(epochs, n_aligned, z_p)
+            + splitnn_backprop_bytes(epochs, n_aligned, batch_size, p_params))
+
+
+def splitnn_rounds(epochs: int, n_aligned: int, batch_size: int) -> int:
+    """Table 2: 2x the number of backprop events (one up, one down)."""
+    return 2 * epochs * ceil(n_aligned / batch_size)
+
+
+# --- Appendix E: VFedTrans (FedSVD) ----------------------------------------
+
+def vfedtrans_footprint_bytes(n_aligned: int, x_t: int, x_d: int) -> int:
+    """Eq. 10: 2|D_A|^2 + x_t*x_tot + x_d*x_tot + |D_A|x_t + |D_A|x_d +
+    |D_A|x_tot elements, 5 exchanges, 4 bytes each."""
+    x_tot = x_t + x_d
+    elems = (2 * n_aligned ** 2 + x_t * x_tot + x_d * x_tot
+             + n_aligned * x_t + n_aligned * x_d + n_aligned * x_tot)
+    return elems * 4
+
+
+VFEDTRANS_ROUNDS = 5   # trusted keygen (x2), uploads (x2), U download
+APCVFL_ROUNDS = 1

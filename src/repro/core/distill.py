@@ -1,0 +1,41 @@
+"""Paper Eq. 5: composite reconstruction + masked distillation loss.
+
+    L_total(x_i) = L_enc-dec(x_i) + lambda * L_distill(x_i)   if x_i aligned
+                 = L_enc-dec(x_i)                              otherwise
+
+L_distill is MSE or MAE between the teacher joint latent z_A_i and the
+student latent g3(x_i).  The batch carries z_A rows (zeros where unaligned)
+and an ``aligned`` {0,1} mask; masking reproduces the per-sample case split.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import autoencoder as ae
+
+
+def distill_loss(params: dict, batch: dict, *, lam: float = 0.01,
+                 kind: str = "mse", use_kernel: bool = False) -> jax.Array:
+    x, z_t, mask = batch["x"], batch["z_teacher"], batch["aligned"]
+    z = ae.encode(params, x)
+    x_hat = ae.mlp_apply(params["dec"], z)
+    if use_kernel:
+        from repro.kernels import ops as kops
+        return kops.fused_distill_loss(x, x_hat, z, z_t, mask, lam=lam,
+                                       kind=kind)
+    rec = jnp.mean(jnp.square(x - x_hat), axis=-1)               # (B,)
+    diff = z - z_t
+    if kind == "mae":
+        dis = jnp.mean(jnp.abs(diff), axis=-1)
+    else:
+        dis = jnp.mean(jnp.square(diff), axis=-1)
+    per_row = rec + lam * dis * mask.astype(rec.dtype)
+    return jnp.mean(per_row)
+
+
+def make_loss(lam: float = 0.01, kind: str = "mse", use_kernel: bool = False):
+    def loss(params, batch):
+        return distill_loss(params, batch, lam=lam, kind=kind,
+                            use_kernel=use_kernel)
+    return loss

@@ -1,0 +1,85 @@
+"""FedSVD (Chai et al., KDD'22): lossless federated SVD over vertically
+partitioned data via random orthogonal masking — the representation-learning
+stage of VFedTrans.
+
+Protocol (and the paper's Appendix-E comm accounting):
+  keygen -> parties:  A (n x n), B_t / B_d slices of orthogonal B
+  party k -> server:  S~_k = A X_k B_k
+  server:             X' = sum_k S~_k ;  SVD(X') = U' S V'^T
+  server -> active:   U~ = U' (masked left factors)
+  active:             U = A^T U'   (lossless since A, B orthogonal)
+
+Implementation note (DESIGN.md): generating a dense random-orthogonal
+A (n x n) costs O(n^3); we use a signed permutation (exactly orthogonal,
+O(n)) — the protocol and its *byte accounting* are unchanged (A ships as a
+dense n x n matrix per Eq. 10), the algebra is identical.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core import comm
+
+
+@dataclass
+class FedSVDResult:
+    U: np.ndarray            # (n, r) federated left factors (active's copy)
+    S: np.ndarray            # (r,) singular values
+    channel: comm.Channel
+    rounds: int
+
+
+def _signed_perm(n: int, rng) -> tuple:
+    perm = rng.permutation(n)
+    sign = rng.choice([-1.0, 1.0], n).astype(np.float32)
+    return perm, sign
+
+
+def _apply_A(perm, sign, X):          # A @ X  with A = P diag(sign)
+    return (X * sign[:, None])[perm]
+
+
+def _apply_AT(perm, sign, X):
+    # A[i,j] = sign[j]*[j == perm[i]]  =>  (A^T Y)[i] = sign[i]*Y[perm^-1(i)]
+    return X[np.argsort(perm)] * sign[:, None]
+
+
+def fedsvd(x_active: np.ndarray, x_passive: np.ndarray, *, seed: int = 0,
+           channel: comm.Channel | None = None) -> FedSVDResult:
+    """x_active (n, x_t), x_passive (n, x_d): the ALIGNED rows of each party."""
+    n, x_t = x_active.shape
+    x_d = x_passive.shape[1]
+    x_tot = x_t + x_d
+    rng = np.random.RandomState(seed)
+    channel = channel or comm.Channel()
+
+    # trusted key generator
+    permA, signA = _signed_perm(n, rng)
+    permB, signB = _signed_perm(x_tot, rng)
+    channel.send("keygen->active: A,B_t", (n * n + x_t * x_tot) * 4)
+    channel.send("keygen->passive: A,B_d", (n * n + x_d * x_tot) * 4)
+
+    # masked uploads: S~_k = A X_k B_k   (B_k = rows of B for party k's cols)
+    def mask_party(Xk, col_offset, ncols):
+        AX = _apply_A(permA, signA, Xk.astype(np.float32))
+        S = np.zeros((n, x_tot), np.float32)
+        # B = P_B diag(signB): column j of global X lands in column permB[j]
+        for j in range(ncols):
+            gj = col_offset + j
+            S[:, permB[gj]] = AX[:, j] * signB[permB[gj]]
+        return S
+
+    St = mask_party(x_active, 0, x_t)
+    Sd = mask_party(x_passive, x_t, x_d)
+    channel.send("active->server: S~_t", n * x_t * 4)
+    channel.send("passive->server: S~_d", n * x_d * 4)
+
+    Xp = St + Sd
+    Up, S, _ = np.linalg.svd(Xp, full_matrices=False)
+    channel.send("server->active: U~", n * x_tot * 4)
+
+    U = _apply_AT(permA, signA, Up)
+    return FedSVDResult(U.astype(np.float32), S.astype(np.float32),
+                        channel, comm.VFEDTRANS_ROUNDS)

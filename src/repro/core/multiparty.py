@@ -1,0 +1,141 @@
+"""K-participant APC-VFL (paper Sec. 3 formalizes K parties; the
+experiments use K=2 — this module implements the general protocol).
+
+One active participant (holds labels), K-1 passive participants. Step ①
+runs at every party; each passive sends its aligned-row latents to the
+active party (K-1 single exchanges — still ONE round per link, the paper's
+claim is per-pair); steps ②-④ run at the active party on the concat of all
+K latent blocks. Alignment is the row-intersection across ALL parties
+(pairwise PSI chained)."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import autoencoder as ae
+from repro.core import classifier as clf
+from repro.core import comm
+from repro.core import distill
+from repro.core import training
+from repro.core.psi import psi
+from repro.data.synthetic import TabularDataset
+from repro.data.vertical import ParticipantData
+
+
+@dataclass
+class VFLScenarioK:
+    name: str
+    active: ParticipantData
+    passives: List[ParticipantData]
+    n_aligned: int
+    n_classes: int
+
+
+def make_scenario_k(ds: TabularDataset, *, n_parties: int,
+                    n_active_features: int, n_aligned: int,
+                    seed: int = 0) -> VFLScenarioK:
+    """Split columns among K parties (active gets ``n_active_features``,
+    passives share the rest round-robin); rows: ``n_aligned`` common to all,
+    remainder split disjointly."""
+    assert n_parties >= 2
+    rng = np.random.RandomState(seed + 2000)
+    d = ds.x.shape[1]
+    cols = rng.permutation(d)
+    a_cols = np.sort(cols[:n_active_features])
+    rest = cols[n_active_features:]
+    p_cols = [np.sort(rest[i::n_parties - 1]) for i in range(n_parties - 1)]
+    assert all(len(c) for c in p_cols), "not enough features for K parties"
+
+    n = len(ds.x)
+    perm = rng.permutation(n)
+    aligned = perm[:n_aligned]
+    rest_rows = np.array_split(perm[n_aligned:], n_parties)
+    rows = [np.concatenate([aligned, rr]) for rr in rest_rows]
+
+    active = ParticipantData(x=ds.x[rows[0]][:, a_cols], ids=ds.ids[rows[0]],
+                             y=ds.y[rows[0]])
+    passives = [ParticipantData(x=ds.x[rows[i + 1]][:, p_cols[i]],
+                                ids=ds.ids[rows[i + 1]])
+                for i in range(n_parties - 1)]
+    return VFLScenarioK(ds.name, active, passives, n_aligned, ds.n_classes)
+
+
+@dataclass
+class APCVFLKResult:
+    metrics: dict
+    channels: List[comm.Channel]
+    rounds_per_link: int
+    z_dim: int
+    epochs: dict = field(default_factory=dict)
+
+
+def run_apcvfl_k(sc: VFLScenarioK, *, lam: float = 0.01, kind: str = "mse",
+                 seed: int = 0, batch_size: int = 128,
+                 max_epochs: int = 200) -> APCVFLKResult:
+    key = jax.random.PRNGKey(seed)
+    keys = jax.random.split(key, len(sc.passives) + 3)
+    epochs = {}
+
+    # --- multi-party alignment: intersect row IDs across all parties ------
+    channels = [comm.Channel() for _ in sc.passives]
+    common = sc.active.ids
+    for p, ch in zip(sc.passives, channels):
+        common, _, _ = psi(common, p.ids, channel=ch)
+    idx_a = _index_of(sc.active.ids, common)
+    idx_ps = [_index_of(p.ids, common) for p in sc.passives]
+
+    # --- step 1 at every party ---------------------------------------------
+    xa = sc.active.x
+    ra = training.train(
+        ae.init_autoencoder(keys[0], ae.table3_encoder("g1_active", xa.shape[1])),
+        {"x": xa}, ae.recon_loss, batch_size=batch_size,
+        max_epochs=max_epochs, seed=seed)
+    epochs["g1_active"] = ra.epochs_run
+    za = np.asarray(ae.encode(ra.params, jnp.asarray(xa[idx_a])))
+
+    blocks = [za]
+    for i, (p, idx_p, ch) in enumerate(zip(sc.passives, idx_ps, channels)):
+        rp = training.train(
+            ae.init_autoencoder(keys[i + 1],
+                                ae.table3_encoder("g1_passive", p.x.shape[1])),
+            {"x": p.x}, ae.recon_loss, batch_size=batch_size,
+            max_epochs=max_epochs, seed=seed + i + 1)
+        epochs[f"g1_passive{i}"] = rp.epochs_run
+        zp = np.asarray(ae.encode(rp.params, jnp.asarray(p.x[idx_p])))
+        ch.send_array(f"step1/Z_passive{i}_aligned", zp)   # THE exchange
+        blocks.append(zp)
+
+    # --- steps 2-4 at the active party --------------------------------------
+    zj = np.concatenate(blocks, axis=1).astype(np.float32)
+    r2 = training.train(
+        ae.init_autoencoder(keys[-2], ae.table3_encoder("g2", zj.shape[1])),
+        {"x": zj}, ae.recon_loss, batch_size=batch_size,
+        max_epochs=max_epochs, seed=seed + 100)
+    epochs["g2"] = r2.epochs_run
+    zt_al = np.asarray(ae.encode(r2.params, jnp.asarray(zj)))
+    m2 = zt_al.shape[1]
+
+    n_a = len(xa)
+    z_teacher = np.zeros((n_a, m2), np.float32)
+    mask = np.zeros((n_a,), np.float32)
+    z_teacher[idx_a] = zt_al
+    mask[idx_a] = 1.0
+    r3 = training.train(
+        ae.init_autoencoder(keys[-1], ae.table3_encoder("g3", xa.shape[1])),
+        {"x": xa, "z_teacher": z_teacher, "aligned": mask},
+        distill.make_loss(lam=lam, kind=kind), batch_size=batch_size,
+        max_epochs=max_epochs, seed=seed + 200)
+    epochs["g3"] = r3.epochs_run
+
+    z_all = np.asarray(ae.encode(r3.params, jnp.asarray(xa)))
+    metrics = clf.kfold_cv(z_all, sc.active.y, sc.n_classes, seed=seed)
+    return APCVFLKResult(metrics, channels, comm.APCVFL_ROUNDS, m2, epochs)
+
+
+def _index_of(ids: np.ndarray, subset: np.ndarray) -> np.ndarray:
+    pos = {int(v): i for i, v in enumerate(ids)}
+    return np.asarray([pos[int(s)] for s in subset], dtype=np.int64)

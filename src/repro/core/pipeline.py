@@ -1,0 +1,196 @@
+"""APC-VFL: the four-step protocol (paper Fig. 3) plus the aligned-only
+adaptation used against SplitNN (paper Fig. 4) and the Appendix-F
+encoder-quality probe (Algorithm 1).
+
+Step 1  local representation learning   (every participant, autoencoder)
+        -> passive sends Z_p[aligned] to active: THE single exchange.
+Step 2  aligned representation learning (active, autoencoder g2 on
+        concat(Z_a, Z_p) of aligned rows)
+Step 3  knowledge distillation          (active, student AE g3 on the FULL
+        active dataset, Eq. 5 masked loss)
+Step 4  classifier on Z = g3(X_active), labels from the active party.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import autoencoder as ae
+from repro.core import classifier as clf
+from repro.core import comm
+from repro.core import distill
+from repro.core import training
+from repro.core.psi import psi
+from repro.data.vertical import VFLScenario
+
+
+@dataclass
+class APCVFLResult:
+    metrics: dict                 # k-fold CV metrics on enhanced dataset
+    channel: comm.Channel         # measured communication
+    rounds: int
+    epochs: dict                  # epochs run per stage
+    z_dim: int
+    params: dict = field(default_factory=dict)   # trained models
+
+
+def run_apcvfl(sc: VFLScenario, *, lam: float = 0.01, kind: str = "mse",
+               seed: int = 0, batch_size: int = 128, max_epochs: int = 200,
+               use_kernel: bool = False, ablation: bool = False) -> APCVFLResult:
+    """Full protocol. ``ablation=True`` trains g3 WITHOUT the distillation
+    term (paper's 'Ablation' curves — isolates the nonlinear-encoder gain).
+    """
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    channel = comm.Channel()
+    epochs = {}
+
+    # --- PSI on IDs (assumed precondition in the paper; bytes logged) ------
+    aligned_ids, idx_a, idx_p = psi(sc.active.ids, sc.passive.ids,
+                                    channel=channel)
+    psi_rounds = 2
+
+    xa, xp = sc.active.x, sc.passive.x
+
+    # --- Step 1: local representation learning -----------------------------
+    if not ablation:
+        wa = ae.table3_encoder("g1_active", xa.shape[1])
+        wp = ae.table3_encoder("g1_passive", xp.shape[1])
+        ae_a = ae.init_autoencoder(k1, wa)
+        ae_p = ae.init_autoencoder(k2, wp)
+        ra = training.train(ae_a, {"x": xa}, ae.recon_loss,
+                            batch_size=batch_size, max_epochs=max_epochs,
+                            seed=seed)
+        rp = training.train(ae_p, {"x": xp}, ae.recon_loss,
+                            batch_size=batch_size, max_epochs=max_epochs,
+                            seed=seed + 1)
+        epochs["g1_active"], epochs["g1_passive"] = ra.epochs_run, rp.epochs_run
+
+        za_al = np.asarray(ae.encode(ra.params, jnp.asarray(xa[idx_a])))
+        zp_al = np.asarray(ae.encode(rp.params, jnp.asarray(xp[idx_p])))
+
+        # THE single information exchange: passive -> active, aligned latents
+        channel.send_array("step1/Z_passive_aligned", zp_al)
+
+        # --- Step 2: aligned (joint) representation learning ---------------
+        zj = np.concatenate([za_al, zp_al], axis=1).astype(np.float32)
+        w2 = ae.table3_encoder("g2", zj.shape[1])
+        ae_2 = ae.init_autoencoder(k3, w2)
+        r2 = training.train(ae_2, {"x": zj}, ae.recon_loss,
+                            batch_size=batch_size, max_epochs=max_epochs,
+                            seed=seed + 2)
+        epochs["g2"] = r2.epochs_run
+        z_teacher_al = np.asarray(ae.encode(r2.params, jnp.asarray(zj)))
+        m2 = z_teacher_al.shape[1]
+    else:
+        m2 = ae.table3_encoder("g2", 1)[-1]
+        z_teacher_al = None
+
+    # --- Step 3: knowledge distillation into g3 -----------------------------
+    n_a = len(xa)
+    z_teacher = np.zeros((n_a, m2), np.float32)
+    mask = np.zeros((n_a,), np.float32)
+    if not ablation:
+        z_teacher[idx_a] = z_teacher_al
+        mask[idx_a] = 1.0
+    w3 = ae.table3_encoder("g3", xa.shape[1])
+    assert w3[-1] == m2, "M3 == M2: dimensional consistency (Sec. 4.3)"
+    ae_3 = ae.init_autoencoder(k4, w3)
+    loss3 = distill.make_loss(lam=lam, kind=kind, use_kernel=use_kernel)
+    r3 = training.train(ae_3, {"x": xa, "z_teacher": z_teacher,
+                               "aligned": mask}, loss3,
+                        batch_size=batch_size, max_epochs=max_epochs,
+                        seed=seed + 3)
+    epochs["g3"] = r3.epochs_run
+
+    # --- Step 4: classifier on the enhanced dataset -------------------------
+    z_all = np.asarray(ae.encode(r3.params, jnp.asarray(xa)))
+    metrics = clf.kfold_cv(z_all, sc.active.y, sc.n_classes, seed=seed)
+
+    data_rounds = 0 if ablation else comm.APCVFL_ROUNDS
+    return APCVFLResult(metrics, channel, data_rounds, epochs, m2,
+                        params={"g3": r3.params})
+
+
+def run_local_baseline(sc: VFLScenario, seed: int = 0) -> dict:
+    """Paper 'Local': probe on raw active features."""
+    return clf.kfold_cv(sc.active.x, sc.active.y, sc.n_classes, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# aligned-only adaptation (paper Fig. 4, for the SplitNN comparison)
+# ---------------------------------------------------------------------------
+
+def run_apcvfl_aligned_only(sc: VFLScenario, *, seed: int = 0,
+                            batch_size: int = 128, max_epochs: int = 200,
+                            test_size: int = 500) -> dict:
+    """Classical fully-aligned setting: train the classifier directly on the
+    joint latents g2(concat(Z_a, Z_p)); distillation is skipped (no
+    unaligned rows exist to distill into)."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    channel = comm.Channel()
+    _, idx_a, idx_p = psi(sc.active.ids, sc.passive.ids, channel=channel)
+    xa, xp = sc.active.x[idx_a], sc.passive.x[idx_p]
+    y = sc.active.y[idx_a]
+
+    ae_a = ae.init_autoencoder(k1, ae.table3_encoder("g1_active", xa.shape[1]))
+    ae_p = ae.init_autoencoder(k2, ae.table3_encoder("g1_passive", xp.shape[1]))
+    ra = training.train(ae_a, {"x": xa}, ae.recon_loss,
+                        batch_size=batch_size, max_epochs=max_epochs, seed=seed)
+    rp = training.train(ae_p, {"x": xp}, ae.recon_loss,
+                        batch_size=batch_size, max_epochs=max_epochs,
+                        seed=seed + 1)
+    za = np.asarray(ae.encode(ra.params, jnp.asarray(xa)))
+    zp = np.asarray(ae.encode(rp.params, jnp.asarray(xp)))
+    channel.send_array("step1/Z_passive_aligned", zp)
+
+    zj = np.concatenate([za, zp], 1).astype(np.float32)
+    ae_2 = ae.init_autoencoder(k3, ae.table3_encoder("g2", zj.shape[1]))
+    r2 = training.train(ae_2, {"x": zj}, ae.recon_loss,
+                        batch_size=batch_size, max_epochs=max_epochs,
+                        seed=seed + 2)
+    z = np.asarray(ae.encode(r2.params, jnp.asarray(zj)))
+
+    # train/test split as in the SplitNN comparison (test_size held out)
+    rng = np.random.RandomState(seed)
+    perm = rng.permutation(len(z))
+    te, tr = perm[:test_size], perm[test_size:]
+    params = clf.fit_logreg(jnp.asarray(z[tr]), jnp.asarray(y[tr]),
+                            sc.n_classes)
+    pred = clf.predict(params, z[te])
+    metrics = clf.f1_scores(y[te], pred, sc.n_classes)
+    return {"metrics": metrics, "channel": channel, "rounds": 1,
+            "epochs": {"g1_active": ra.epochs_run,
+                       "g1_passive": rp.epochs_run, "g2": r2.epochs_run}}
+
+
+# ---------------------------------------------------------------------------
+# Appendix F, Algorithm 1: encoder training with representation-quality probe
+# ---------------------------------------------------------------------------
+
+def train_encoder_with_probe(x: np.ndarray, y: np.ndarray, n_classes: int,
+                             widths: list, *, metric: str = "accuracy",
+                             k: int = 5, max_epochs: int = 30,
+                             seed: int = 0) -> dict:
+    """Runs Algorithm 1: per-epoch, k-fold CV the probe on Z=g(X).  Returns
+    the loss curve, per-epoch metric sets M~, the raw-X metric set M, and
+    the equivalence gap (Eq. 12)."""
+    key = jax.random.PRNGKey(seed)
+    params = ae.init_autoencoder(key, widths)
+    history = {"loss": [], "probe": []}
+
+    def cb(epoch, p, tl, vl):
+        z = np.asarray(ae.encode(p, jnp.asarray(x)))
+        m = clf.kfold_cv(z, y, n_classes, k=k, seed=seed)
+        history["probe"].append(m[metric])
+        history["loss"].append(tl)
+
+    training.train(params, {"x": x}, ae.recon_loss, max_epochs=max_epochs,
+                   patience=max_epochs, seed=seed, epoch_callback=cb)
+    base = clf.kfold_cv(x, y, n_classes, k=k, seed=seed)[metric]
+    gap = base - (history["probe"][-1] if history["probe"] else 0.0)
+    return {"history": history, "metric_raw_x": base, "gap": gap}

@@ -1,0 +1,86 @@
+"""Vertical SplitNN baseline (paper Sec. 2.1, Fig. 1).
+
+Local feature extractors use the paper's g1 architectures; the active head
+is the g2 architecture + class layer (Appendix B "fair comparison").  Joint
+end-to-end training on the ALIGNED rows only; per-batch communication is
+one embedding upload (forward) + one gradient download (backward), with
+byte accounting exactly as Appendix E.2.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from math import ceil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import autoencoder as ae
+from repro.core import classifier as clf
+from repro.core import comm
+from repro.core import training
+from repro.core.psi import psi
+from repro.data.vertical import VFLScenario
+
+
+def _head_widths(n_classes: int) -> list:
+    return [384, 256, 256, n_classes]   # g2 + class layer (Appendix B)
+
+
+def init_splitnn(key, n_feat_a: int, n_feat_p: int, n_classes: int) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "la": ae.init_mlp(k1, ae.table3_encoder("g1_active", n_feat_a)),
+        "lp": ae.init_mlp(k2, ae.table3_encoder("g1_passive", n_feat_p)),
+        "head": ae.init_mlp(k3, _head_widths(n_classes)),
+    }
+
+
+def splitnn_logits(params: dict, xa: jax.Array, xp: jax.Array) -> jax.Array:
+    za = ae.mlp_apply(params["la"], xa, final_act=True)
+    zp = ae.mlp_apply(params["lp"], xp, final_act=True)
+    return ae.mlp_apply(params["head"], jnp.concatenate([za, zp], axis=-1))
+
+
+def splitnn_loss(params: dict, batch: dict) -> jax.Array:
+    logits = splitnn_logits(params, batch["xa"], batch["xp"])
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, batch["y"][:, None], axis=-1)[:, 0]
+    return jnp.mean(lse - gold)
+
+
+@dataclass
+class SplitNNResult:
+    metrics: dict
+    rounds: int
+    comm_bytes: int
+    epochs_run: int
+
+
+def run_splitnn(sc: VFLScenario, *, seed: int = 0, batch_size: int = 128,
+                max_epochs: int = 200, test_size: int = 500) -> SplitNNResult:
+    _, idx_a, idx_p = psi(sc.active.ids, sc.passive.ids)
+    xa, xp = sc.active.x[idx_a], sc.passive.x[idx_p]
+    y = sc.active.y[idx_a]
+
+    rng = np.random.RandomState(seed)
+    perm = rng.permutation(len(xa))
+    te, tr = perm[:test_size], perm[test_size:]
+
+    key = jax.random.PRNGKey(seed)
+    params = init_splitnn(key, xa.shape[1], xp.shape[1], sc.n_classes)
+    res = training.train(params,
+                         {"xa": xa[tr], "xp": xp[tr], "y": y[tr]},
+                         splitnn_loss, batch_size=batch_size,
+                         max_epochs=max_epochs, seed=seed)
+
+    pred = np.asarray(jnp.argmax(
+        splitnn_logits(res.params, jnp.asarray(xa[te]), jnp.asarray(xp[te])),
+        axis=-1))
+    metrics = clf.f1_scores(y[te], pred, sc.n_classes)
+
+    n_al = len(tr)
+    epochs = res.epochs_run
+    rounds = comm.splitnn_rounds(epochs, n_al, batch_size)
+    nbytes = comm.splitnn_footprint_bytes(epochs, n_al, batch_size)
+    return SplitNNResult(metrics, rounds, nbytes, epochs)

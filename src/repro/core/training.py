@@ -1,0 +1,96 @@
+"""Shared mini-batch trainer for the tabular APC-VFL stack: Adam with the
+paper's settings (Kingma & Ba defaults), <=200 epochs, early stopping on a
+10% validation split with patience 10 (Appendix B)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class TrainResult:
+    params: dict
+    epochs_run: int
+    steps_run: int
+    train_loss: list
+    val_loss: list
+
+
+def _adam_init(params):
+    z = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params),
+            "t": jnp.zeros((), jnp.int32)}
+
+
+@partial(jax.jit, static_argnames=("loss_fn", "lr"))
+def _adam_step(params, opt, batch, loss_fn, lr=1e-3):
+    loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+    t = opt["t"] + 1
+    b1, b2, eps = 0.9, 0.999, 1e-8
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh = m / (1 - b1 ** t.astype(jnp.float32))
+        vh = v / (1 - b2 ** t.astype(jnp.float32))
+        return (p - lr * mh / (jnp.sqrt(vh) + eps)).astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, params, grads, opt["m"], opt["v"])
+    istuple = lambda x: isinstance(x, tuple)
+    params = jax.tree.map(lambda o: o[0], out, is_leaf=istuple)
+    m = jax.tree.map(lambda o: o[1], out, is_leaf=istuple)
+    v = jax.tree.map(lambda o: o[2], out, is_leaf=istuple)
+    return params, {"m": m, "v": v, "t": t}, loss
+
+
+def train(params, data: dict, loss_fn: Callable, *, batch_size: int = 128,
+          max_epochs: int = 200, patience: int = 10, lr: float = 1e-3,
+          val_frac: float = 0.1, seed: int = 0,
+          epoch_callback: Optional[Callable] = None) -> TrainResult:
+    """data: dict of equal-length arrays (row-aligned). loss_fn(params, batch)."""
+    n = len(next(iter(data.values())))
+    rng = np.random.RandomState(seed)
+    perm = rng.permutation(n)
+    n_val = max(int(n * val_frac), 1)
+    val_idx, tr_idx = perm[:n_val], perm[n_val:]
+    val_batch = {k: jnp.asarray(v[val_idx]) for k, v in data.items()}
+    tr = {k: v[tr_idx] for k, v in data.items()}
+    n_tr = len(tr_idx)
+
+    opt = _adam_init(params)
+    best_val, best_params, since_best = np.inf, params, 0
+    tl_hist, vl_hist, steps = [], [], 0
+    vloss_fn = jax.jit(loss_fn)
+
+    epochs = 0
+    for epoch in range(max_epochs):
+        epochs = epoch + 1
+        order = rng.permutation(n_tr)
+        ep_loss, nb = 0.0, 0
+        for s in range(0, n_tr, batch_size):
+            idx = order[s:s + batch_size]
+            if len(idx) < 2:
+                continue
+            batch = {k: jnp.asarray(v[idx]) for k, v in tr.items()}
+            params, opt, loss = _adam_step(params, opt, batch, loss_fn, lr)
+            ep_loss += float(loss)
+            nb += 1
+            steps += 1
+        vl = float(vloss_fn(params, val_batch))
+        tl_hist.append(ep_loss / max(nb, 1))
+        vl_hist.append(vl)
+        if epoch_callback is not None:
+            epoch_callback(epoch, params, tl_hist[-1], vl)
+        if vl < best_val - 1e-6:
+            best_val, best_params, since_best = vl, params, 0
+        else:
+            since_best += 1
+            if since_best >= patience:
+                break
+    return TrainResult(best_params, epochs, steps, tl_hist, vl_hist)

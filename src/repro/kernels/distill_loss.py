@@ -1,0 +1,62 @@
+"""Fused APC-VFL composite loss (paper Eq. 5) as a Pallas TPU kernel.
+
+One VMEM-resident pass computes, per row,
+    rec_i  = mean_d (x_i - x_hat_i)^2
+    dis_i  = mean_m |z_i - zt_i|^p        (p = 2 for MSE, 1 for MAE)
+    out_i  = rec_i + lam * aligned_i * dis_i
+fusing four elementwise streams + two row reductions that XLA would
+otherwise materialize separately in HBM.  Batch rows are tiled 128 at a
+time (8-sublane x fp32 tiles); feature dims ride whole in VMEM (tabular
+dims here are <= 1024: ~1.5MiB per tile at the defaults).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, xh_ref, z_ref, zt_ref, m_ref, o_ref, *, lam: float,
+            kind: str):
+    x = x_ref[...].astype(jnp.float32)
+    xh = xh_ref[...].astype(jnp.float32)
+    z = z_ref[...].astype(jnp.float32)
+    zt = zt_ref[...].astype(jnp.float32)
+    mask = m_ref[...].astype(jnp.float32)
+    rec = jnp.mean(jnp.square(x - xh), axis=-1)
+    diff = z - zt
+    dis = (jnp.mean(jnp.abs(diff), axis=-1) if kind == "mae"
+           else jnp.mean(jnp.square(diff), axis=-1))
+    o_ref[...] = rec + lam * mask * dis
+
+
+@functools.partial(jax.jit, static_argnames=("lam", "kind", "block_b",
+                                             "interpret"))
+def fused_distill_rows(x, x_hat, z, z_t, mask, *, lam: float = 0.01,
+                       kind: str = "mse", block_b: int = 128,
+                       interpret: bool = False):
+    """Per-row Eq. 5 losses. x/x_hat: (B, D); z/z_t: (B, M); mask: (B,)."""
+    B, D = x.shape
+    M = z.shape[1]
+    pad = (-B) % block_b
+    if pad:
+        padf = lambda a: jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1))
+        x, x_hat, z, z_t, mask = map(padf, (x, x_hat, z, z_t, mask))
+    Bp = B + pad
+    out = pl.pallas_call(
+        functools.partial(_kernel, lam=lam, kind=kind),
+        grid=(Bp // block_b,),
+        in_specs=[
+            pl.BlockSpec((block_b, D), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, D), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, M), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, M), lambda i: (i, 0)),
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block_b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((Bp,), jnp.float32),
+        interpret=interpret,
+    )(x, x_hat, z, z_t, mask)
+    return out[:B]

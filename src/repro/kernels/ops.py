@@ -1,0 +1,51 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On the CPU container the kernels execute via ``interpret=True`` (Pallas
+TPU lowering needs real TPUs); on TPU set ``repro.kernels.ops.INTERPRET =
+False`` (or leave the default auto-detection) for compiled execution.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import distill_loss as _dl
+from repro.kernels import flash_attention as _fa
+
+INTERPRET = jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128):
+    """q/k/v: (B, S, H, hd) [model layout] -> (B, S, H, hd)."""
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    S = qt.shape[2]
+    bq = min(block_q, S)
+    bk = min(block_k, S)
+    out = _fa.flash_attention(qt, kt, vt, causal=causal, window=window,
+                              block_q=bq, block_k=bk, interpret=INTERPRET)
+    return jnp.swapaxes(out, 1, 2)
+
+
+def fused_distill_loss(x, x_hat, z, z_t, mask, *, lam: float = 0.01,
+                       kind: str = "mse"):
+    rows = _dl.fused_distill_rows(x, x_hat, z, z_t, mask, lam=lam, kind=kind,
+                                  interpret=INTERPRET)
+    return jnp.mean(rows)
+
+
+def decode_attention(q, k, v, slot_pos, pos, *, window: int = 0,
+                     block_w: int = 512):
+    """One-token cache attention. q: (B, H, hd); k/v: (B, W, H, hd) with kv
+    heads already GQA-expanded; slot_pos: (W,); pos: scalar."""
+    from repro.kernels import decode_attention as _da
+    B, H, hd = q.shape
+    W = k.shape[1]
+    qf = q.reshape(B * H, hd)
+    kf = jnp.swapaxes(k, 1, 2).reshape(B * H, W, hd)
+    vf = jnp.swapaxes(v, 1, 2).reshape(B * H, W, hd)
+    out = _da.decode_attention(qf, kf, vf, slot_pos, pos, window=window,
+                               block_w=min(block_w, W), interpret=INTERPRET)
+    return out.reshape(B, H, hd)

@@ -1,0 +1,65 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q/k/v: (B, H, S, hd) -> (B, H, S, hd). fp32 softmax."""
+    S = q.shape[2]
+    hd = q.shape[-1]
+    scores = jnp.einsum("bhsd,bhtd->bhst", q, k).astype(jnp.float32)
+    scores = scores / np.sqrt(hd)
+    i = jnp.arange(S)[:, None]
+    j = jnp.arange(S)[None, :]
+    ok = jnp.ones((S, S), bool)
+    if causal:
+        ok &= j <= i
+    if window:
+        ok &= (i - j) < window
+    scores = jnp.where(ok, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", probs.astype(q.dtype), v)
+
+
+def fused_distill_loss_ref(x, x_hat, z, z_t, mask, *, lam: float = 0.01,
+                           kind: str = "mse"):
+    """Paper Eq. 5, mean over the batch. All fp32 math."""
+    x = x.astype(jnp.float32)
+    x_hat = x_hat.astype(jnp.float32)
+    z = z.astype(jnp.float32)
+    z_t = z_t.astype(jnp.float32)
+    rec = jnp.mean(jnp.square(x - x_hat), axis=-1)
+    diff = z - z_t
+    if kind == "mae":
+        dis = jnp.mean(jnp.abs(diff), axis=-1)
+    else:
+        dis = jnp.mean(jnp.square(diff), axis=-1)
+    return jnp.mean(rec + lam * dis * mask.astype(jnp.float32))
+
+
+def ssd_chunk_ref(x, dt, A, Bm, Cm):
+    """Sequential (step-by-step) SSD oracle.
+    x: (B,S,H,P), dt: (B,S,H), A: (H,), Bm/Cm: (B,S,G,N) with G dividing H.
+    Returns y: (B,S,H,P)."""
+    B_, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=2)
+    Ch = jnp.repeat(Cm, rep, axis=2)
+
+    def step(h, t):
+        xt, dtt, Bt, Ct = t
+        decay = jnp.exp(dtt * A)[..., None, None]       # (B,H,1,1)
+        upd = jnp.einsum("bh,bhn,bhp->bhnp", dtt, Bt, xt)
+        h = h * decay + upd
+        y = jnp.einsum("bhn,bhnp->bhp", Ct, h)
+        return h, y
+
+    h0 = jnp.zeros((B_, H, N, P), jnp.float32)
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(Bh, 1, 0), jnp.moveaxis(Ch, 1, 0))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1)

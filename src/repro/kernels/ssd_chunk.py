@@ -1,0 +1,75 @@
+"""Pallas TPU kernel for the Mamba2 SSD intra-chunk block.
+
+The XLA chunked SSD (models/mamba2.ssd_chunked) materializes the
+(Lc x Lc) decay matrix, the (Lc x Lc) score matrix and their elementwise
+products in HBM for every (batch, chunk, head) — the dominant HBM traffic
+of the zamba2 training step (EXPERIMENTS.md section Perf, pair A). This
+kernel keeps the whole intra-chunk computation VMEM-resident, emitting only
+y_intra (Lc, P) and the chunk-final state contribution (N, P) per grid cell
+— the SSD analogue of flash attention.
+
+Grid: one cell per (batch*chunk, head). VMEM budget at Lc=256, N=64, P=64
+(zamba2): B/C 2*64KiB + x 64KiB + decay/score tiles 2*256KiB ~ 0.7MiB.
+The inter-chunk O(S/Lc) recurrence stays on the host side (it is tiny).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(a_ref, b_ref, c_ref, x_ref, y_ref, st_ref):
+    a = a_ref[0].astype(jnp.float32)                       # (Lc,)
+    B = b_ref[0].astype(jnp.float32)                       # (Lc, N)
+    C = c_ref[0].astype(jnp.float32)                       # (Lc, N)
+    x = x_ref[0].astype(jnp.float32)                       # (Lc, P)
+    Lc = a.shape[0]
+
+    cs = jnp.cumsum(a)                                     # (Lc,)
+    diff = cs[:, None] - cs[None, :]
+    tri = jax.lax.broadcasted_iota(jnp.int32, (Lc, Lc), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (Lc, Lc), 1)
+    Lmat = jnp.where(tri, jnp.exp(diff), 0.0)              # VMEM only
+    scores = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    y = jax.lax.dot_general(scores * Lmat, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    decay_end = jnp.exp(cs[-1] - cs)                       # (Lc,)
+    st = jax.lax.dot_general(B * decay_end[:, None], x,
+                             (((0,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    st_ref[0] = st.astype(st_ref.dtype)                    # (N, P)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_intra_chunk(a, B, C, x, *, interpret: bool = False):
+    """a: (G, Lc) log-decays; B/C: (G, Lc, N); x: (G, Lc, P) pre-scaled by
+    dt. G = batch*chunks*heads flattened. Returns (y (G, Lc, P),
+    states (G, N, P))."""
+    G, Lc = a.shape
+    N = B.shape[-1]
+    P = x.shape[-1]
+    return pl.pallas_call(
+        _kernel,
+        grid=(G,),
+        in_specs=[
+            pl.BlockSpec((1, Lc), lambda i: (i, 0)),
+            pl.BlockSpec((1, Lc, N), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, Lc, N), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, Lc, P), lambda i: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Lc, P), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, N, P), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((G, Lc, P), jnp.float32),
+            jax.ShapeDtypeStruct((G, N, P), jnp.float32),
+        ],
+        interpret=interpret,
+    )(a, B, C, x)

@@ -1,0 +1,285 @@
+"""Trip-count-aware HLO text analysis.
+
+``compiled.cost_analysis()`` counts a ``while`` (scan) body ONCE, ignoring
+the trip count — a 48-layer scanned stack would be under-counted 48x.  This
+walker parses the optimized per-device HLO text, recursively descends into
+called computations (fusion/call/while/conditional), multiplies ``while``
+bodies by their ``known_trip_count`` backend config, and accumulates:
+
+  * matmul FLOPs (dot ops: 2 * prod(out_shape) * contraction),
+  * convolution FLOPs,
+  * bytes accessed (operands + outputs of dot/fusion/copy/collective ops —
+    an HBM-traffic estimate; elementwise ops live inside fusions),
+  * collective bytes by kind (all-gather / all-reduce / reduce-scatter /
+    all-to-all / collective-permute), operand sizes summed, loop-scaled.
+
+Numbers are per-device (the module is the SPMD-partitioned program);
+global = per-device * n_chips for balanced programs.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\](?:\{[\d,]*\})?")
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$")
+_CALL_RE = re.compile(r"(?:calls|body|to_apply)=%?([\w\.\-]+)")
+_COND_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIP_RE = re.compile(r'known_trip_count[^\d]*(\d+)')
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _parse_shapes(type_str):
+    """'(f32[8,16], s32[4])' or 'f32[8,16]' -> [(dtype, [dims]), ...]"""
+    out = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        shape = [int(x) for x in dims.split(",") if x] if dims else []
+        out.append((dt, shape))
+    return out
+
+
+def _nbytes(shapes) -> int:
+    total = 0
+    for dt, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _prod(xs):
+    n = 1
+    for x in xs:
+        n *= x
+    return n
+
+
+class Op:
+    __slots__ = ("name", "kind", "out_shapes", "body", "text", "operands")
+
+    def __init__(self, name, kind, out_shapes, body, text, operands):
+        self.name, self.kind = name, kind
+        self.out_shapes, self.body = out_shapes, body
+        self.text, self.operands = text, operands
+
+
+def parse_module(text: str):
+    """-> (computations dict name -> [Op], shapes dict op_name -> shapes)."""
+    comps = {}
+    shapes = {}
+    cur = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        if stripped.startswith(("HloModule",)):
+            continue
+        # computation header: `%name (params...) -> type {` or `ENTRY %name ...`
+        if stripped.endswith("{") and ("->" in stripped or stripped.startswith("ENTRY")):
+            m = re.search(r"%([\w\.\-]+)\s*\(", stripped)
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+            continue
+        if stripped == "}" or stripped.startswith("}"):
+            continue
+        m = _OP_RE.match(line)
+        if not m or cur is None:
+            continue
+        name, rest = m.group(1), m.group(2)
+        # rest: 'type op(operands), attrs'
+        km = re.match(r"((?:\([^)]*\)|[\w\[\]\{\},\.]+))\s+([\w\-]+)", rest)
+        if not km:
+            continue
+        type_str, kind = km.group(1), km.group(2)
+        out_shapes = _parse_shapes(type_str)
+        body = None
+        if kind in ("fusion", "call", "while", "map", "reduce",
+                    "reduce-window", "scatter", "sort", "custom-call",
+                    "conditional", "async-start"):
+            cm = _CALL_RE.search(rest)
+            if cm:
+                body = cm.group(1)
+        # operand names appear inside the first (...) after the op kind
+        par = rest[rest.find("(", len(type_str)) + 1:]
+        depth = 1
+        arglist = []
+        for ch in par:
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            arglist.append(ch)
+        operands = _OPERAND_RE.findall("".join(arglist))
+        op = Op(name, kind, out_shapes, body, rest, operands)
+        comps[cur].append(op)
+        shapes[name] = out_shapes
+    return comps, shapes
+
+
+def _dot_flops(op: Op, shapes) -> float:
+    out_elems = sum(_prod(d) for _, d in op.out_shapes)
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.text)
+    if not m or not op.operands:
+        return 2.0 * out_elems  # fallback
+    lhs = shapes.get(op.operands[0])
+    if not lhs:
+        return 2.0 * out_elems
+    dims = [int(x) for x in m.group(1).split(",") if x]
+    k = _prod([lhs[0][1][i] for i in dims if i < len(lhs[0][1])])
+    # batch dims are shared between out and lhs; out_elems * k * 2 covers it
+    return 2.0 * out_elems * k
+
+
+def _conv_flops(op: Op, shapes) -> float:
+    out_elems = sum(_prod(d) for _, d in op.out_shapes)
+    if len(op.operands) >= 2:
+        rhs = shapes.get(op.operands[1])
+        if rhs:
+            kernel_elems = _prod(rhs[0][1])
+            # rough: 2 * out * (kernel spatial*in_ch)
+            return 2.0 * out_elems * max(kernel_elems // max(rhs[0][1][-1], 1), 1)
+    return 2.0 * out_elems
+
+
+def analyze_text(text: str) -> dict:
+    comps, shapes = parse_module(text)
+
+    entry = None
+    m = re.search(r"ENTRY\s+%?([\w\.\-]+)", text)
+    if m:
+        entry = m.group(1)
+    if entry not in comps:
+        # fall back: the computation with most ops
+        entry = max(comps, key=lambda c: len(comps[c])) if comps else None
+
+    memo = {}
+
+    def walk(cname: str) -> dict:
+        if cname in memo:
+            return memo[cname]
+        acc = {"flops": 0.0, "bytes": 0.0,
+               "coll": defaultdict(float)}
+        memo[cname] = acc  # guard cycles
+        for op in comps.get(cname, []):
+            opbytes = _nbytes(op.out_shapes) + sum(
+                _nbytes(shapes.get(o, [])) for o in op.operands)
+            if op.kind == "dot":
+                acc["flops"] += _dot_flops(op, shapes)
+                acc["bytes"] += opbytes
+            elif op.kind == "convolution":
+                acc["flops"] += _conv_flops(op, shapes)
+                acc["bytes"] += opbytes
+            elif (op.kind in COLLECTIVES or
+                  any(op.kind == c + "-start" for c in COLLECTIVES)):
+                # exact or "-start" only: counting "-done" too would double
+                kind = next(c for c in COLLECTIVES if op.kind.startswith(c))
+                sz = sum(_nbytes(shapes.get(o, [])) for o in op.operands)
+                acc["coll"][kind] += sz
+                acc["bytes"] += opbytes
+            elif op.kind == "while":
+                trip = 1
+                tm = _TRIP_RE.search(op.text)
+                if tm:
+                    trip = int(tm.group(1))
+                sub = walk(op.body) if op.body else {"flops": 0, "bytes": 0,
+                                                     "coll": {}}
+                acc["flops"] += trip * sub["flops"]
+                acc["bytes"] += trip * sub["bytes"]
+                for k, v in sub["coll"].items():
+                    acc["coll"][k] += trip * v
+            elif op.kind == "conditional":
+                bm = _COND_BRANCH_RE.search(op.text)
+                branches = []
+                if bm:
+                    branches = [b.strip().lstrip("%") for b in
+                                bm.group(1).split(",")]
+                if branches:
+                    subs = [walk(b) for b in branches if b in comps]
+                    if subs:
+                        mx = max(subs, key=lambda s: s["flops"])
+                        acc["flops"] += mx["flops"]
+                        acc["bytes"] += mx["bytes"]
+                        for k, v in mx["coll"].items():
+                            acc["coll"][k] += v
+            elif op.body and op.kind in ("fusion", "call", "async-start"):
+                sub = walk(op.body)
+                acc["flops"] += sub["flops"]
+                acc["bytes"] += sub["bytes"] if sub["bytes"] else 0
+                for k, v in sub["coll"].items():
+                    acc["coll"][k] += v
+                if op.kind == "fusion":
+                    acc["bytes"] += opbytes
+        return acc
+
+    if entry is None:
+        return {"flops": 0.0, "bytes": 0.0, "collective_bytes": 0.0,
+                "collectives": {}}
+    res = walk(entry)
+    analyze_text.last_walk = (comps, shapes, memo, entry)  # for breakdown()
+    coll = dict(res["coll"])
+    return {
+        "flops": res["flops"],
+        "bytes": res["bytes"],
+        "collective_bytes": float(sum(coll.values())),
+        "collectives": {k: float(v) for k, v in coll.items()},
+    }
+
+
+def breakdown(text: str, top: int = 20) -> list:
+    """Top contributors to loop-scaled bytes, grouped by the jax op_name
+    metadata (module/op path) — the profiler substitute for the dry-run."""
+    comps, shapes = parse_module(text)
+    entry = None
+    m = re.search(r"ENTRY\s+%?([\w\.\-]+)", text)
+    if m:
+        entry = m.group(1)
+    # compute the trip multiplier of each computation by walking from entry
+    mult = defaultdict(float)
+
+    def walk(cname, scale):
+        mult[cname] += scale
+        for op in comps.get(cname, []):
+            if op.kind == "while" and op.body:
+                trip = 1
+                tm = _TRIP_RE.search(op.text)
+                if tm:
+                    trip = int(tm.group(1))
+                walk(op.body, scale * trip)
+            elif op.body and op.kind in ("fusion", "call", "async-start"):
+                walk(op.body, scale)
+
+    walk(entry, 1.0)
+    agg = defaultdict(lambda: [0.0, 0.0])   # opname -> [bytes, flops]
+    for cname, ops in comps.items():
+        scale = mult.get(cname, 0.0)
+        if scale == 0:
+            continue
+        for op in ops:
+            if op.kind not in ("dot", "convolution", "fusion") and not any(
+                    op.kind.startswith(c) for c in COLLECTIVES):
+                continue
+            nm = re.search(r'op_name="([^"]*)"', op.text)
+            label = nm.group(1) if nm else op.kind
+            label = re.sub(r"\[.*?\]", "", label)[:110]
+            b = (_nbytes(op.out_shapes) + sum(
+                _nbytes(shapes.get(o, [])) for o in op.operands)) * scale
+            f = _dot_flops(op, shapes) * scale if op.kind == "dot" else 0.0
+            agg[label][0] += b
+            agg[label][1] += f
+    rows = sorted(agg.items(), key=lambda kv: -kv[1][0])[:top]
+    return [{"op": k, "gbytes": v[0] / 1e9, "gflops": v[1] / 1e9}
+            for k, v in rows]

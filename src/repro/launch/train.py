@@ -1,0 +1,71 @@
+"""LM training driver: train any ``--arch`` (reduced via --smoke for CPU)
+on the synthetic Markov token stream, with checkpointing and metrics.
+
+On real hardware the same driver runs the production mesh (pjit over
+``make_production_mesh()``); on this CPU container use --smoke.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import ckpt
+from repro.configs import get_config, get_smoke
+from repro.data.tokens import batches
+from repro.optim.adam import AdamW
+from repro.train.loop import make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt", default="")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+    if cfg.family == "audio":
+        raise SystemExit("use launch/train for LM families; hubert trains "
+                         "via the masked-frame objective in tests/examples")
+    fns = make_train_step(cfg, AdamW(lr=args.lr))
+    params, opt = fns.init(jax.random.PRNGKey(0))
+    step_fn = jax.jit(fns.step)
+
+    losses = []
+    t0 = time.time()
+    for i, batch in enumerate(batches(cfg.vocab_size, args.batch, args.seq,
+                                      args.steps)):
+        b = {"tokens": jnp.asarray(batch["tokens"])}
+        if cfg.family == "vlm":
+            b["image_embeds"] = jnp.zeros(
+                (args.batch, cfg.n_image_tokens, cfg.d_model), jnp.float32)
+        params, opt, metrics = step_fn(params, opt, b)
+        losses.append(float(metrics["loss"]))
+        if i % args.log_every == 0 or i == args.steps - 1:
+            print(f"step {i:4d} loss {losses[-1]:.4f} "
+                  f"ce {float(metrics['ce']):.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} "
+                  f"({time.time()-t0:.1f}s)", flush=True)
+
+    if args.ckpt:
+        ckpt.save(args.ckpt, {"params": params}, step=args.steps,
+                  meta={"arch": args.arch, "loss": losses[-1]})
+        print("saved", args.ckpt)
+    print(json.dumps({"first_loss": losses[0], "last_loss": losses[-1],
+                      "improved": losses[-1] < losses[0]}))
+
+
+if __name__ == "__main__":
+    main()

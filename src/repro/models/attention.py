@@ -1,0 +1,222 @@
+"""GQA self-attention and cross-attention with KV-cache decode.
+
+Sharding: q/k/v/o projections are tensor-parallel along the flat head dim
+(``tp``) and FSDP along d_model (``fsdp``).  With ``replicate_kv=True`` the
+KV projections stay replicated along tp — a beyond-paper perf knob that
+removes the K/V all-gather GSPMD otherwise inserts when n_kv_heads does not
+divide the tp axis (see EXPERIMENTS.md section "Perf").
+
+Decode uses a slot-position cache: ``k/v`` of shape (B, W, K, hd) plus an
+int32 ``slot_pos`` (W,) recording the absolute position written in each slot
+(-1 = empty).  Full-attention decode is the special case W = seq_len; the
+sliding-window variant rolls slots with ``pos % W``.  RoPE is applied at
+write time so slot order never matters.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.common import NEG_INF, causal_mask, rope
+from repro.sharding.policy import ParamDef
+
+
+class KVCache(NamedTuple):
+    k: jax.Array          # (B, W, K, hd)
+    v: jax.Array          # (B, W, K, hd)
+    slot_pos: jax.Array   # (W,) int32, -1 = empty
+
+
+def schema_attention(cfg: ModelConfig, cross: bool = False) -> dict:
+    d, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    kv_tp = None if cfg.replicate_kv else "tp"
+    s = {
+        "wq": ParamDef((d, H * hd), ("fsdp", "tp")),
+        "wk": ParamDef((d, K * hd), ("fsdp", kv_tp)),
+        "wv": ParamDef((d, K * hd), ("fsdp", kv_tp)),
+        "wo": ParamDef((H * hd, d), ("tp", "fsdp")),
+    }
+    return s
+
+
+def _split_heads(x: jax.Array, n: int, hd: int) -> jax.Array:
+    return x.reshape(x.shape[:-1] + (n, hd))
+
+
+def _gqa_expand(kv: jax.Array, H: int, K: int) -> jax.Array:
+    """(B, S, K, hd) -> (B, S, H, hd) by repeating each kv head H//K times."""
+    if H == K:
+        return kv
+    B, S, _, hd = kv.shape
+    kv = jnp.broadcast_to(kv[:, :, :, None, :], (B, S, K, H // K, hd))
+    return kv.reshape(B, S, H, hd)
+
+
+def _sdpa(q, k, v, bias, softmax_bf16: bool = False) -> jax.Array:
+    """q: (B,S,H,hd), k/v: (B,T,H,hd), bias broadcastable to (B,H,S,T).
+
+    softmax_bf16 halves every (S, S) HBM tensor (scores/probs chain) at the
+    cost of ~2 decimal digits in the probabilities (max-subtracted, so
+    stable); the fp32 path is the default."""
+    hd = q.shape[-1]
+    if softmax_bf16:
+        scale = jnp.asarray(1.0 / np.sqrt(hd), q.dtype)
+        scores = jnp.einsum("bshd,bthd->bhst", q * scale, k)   # bf16 S^2
+        scores = scores + bias.astype(scores.dtype)
+        m = jnp.max(scores.astype(jnp.float32), axis=-1, keepdims=True)
+        p = jnp.exp(scores - m.astype(scores.dtype))
+        probs = p / jnp.sum(p, axis=-1, keepdims=True).astype(p.dtype)
+        return jnp.einsum("bhst,bthd->bshd", probs, v)
+    scores = jnp.einsum("bshd,bthd->bhst", q, k).astype(jnp.float32)
+    scores = scores / np.sqrt(hd) + bias
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhst,bthd->bshd", probs, v)
+    return out
+
+
+def _sdpa_chunked(q, k, v, *, causal: bool, window: int, chunk: int) -> jax.Array:
+    """Online-softmax attention scanned over kv chunks — the flash-attention
+    recurrence expressed in XLA: no (S, S) score tensor ever reaches HBM,
+    only (S, chunk) tiles live inside the scan body.  This is the pure-JAX
+    twin of ``kernels/flash_attention.py`` (which is the TPU Pallas version)
+    and is what the dry-run lowers, so the roofline memory term reflects the
+    fused behaviour. q/k/v: (B, S, H, hd)."""
+    B, S, H, hd = q.shape
+    nchunks = S // chunk
+    assert S % chunk == 0
+    qf = q.astype(jnp.float32) / np.sqrt(hd)
+    kc = jnp.moveaxis(k.astype(jnp.float32).reshape(B, nchunks, chunk, H, hd), 1, 0)
+    vc = jnp.moveaxis(v.astype(jnp.float32).reshape(B, nchunks, chunk, H, hd), 1, 0)
+    rows = jnp.arange(S)
+
+    def body(carry, inp):
+        m, l, acc = carry                      # (B,H,S), (B,H,S), (B,S,H,hd)
+        j, kj, vj = inp
+        s = jnp.einsum("bshd,bthd->bhst", qf, kj)          # (B,H,S,chunk)
+        cols = j * chunk + jnp.arange(chunk)
+        ok = jnp.ones((S, chunk), bool)
+        if causal:
+            ok &= cols[None, :] <= rows[:, None]
+        if window:
+            ok &= (rows[:, None] - cols[None, :]) < window
+        s = jnp.where(ok, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(ok, p, 0.0)
+        l = l * alpha + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bhst,bthd->bshd", p, vj)
+        acc = acc * jnp.moveaxis(alpha, 1, 2)[..., None] + pv
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, H, S), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, S), jnp.float32)
+    a0 = jnp.zeros((B, S, H, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (jnp.arange(nchunks), kc, vc))
+    out = acc / jnp.maximum(jnp.moveaxis(l, 1, 2), 1e-30)[..., None]
+    return out.astype(q.dtype)
+
+
+def attention(p: dict, cfg: ModelConfig, x: jax.Array, *,
+              positions: jax.Array, window: int = 0) -> jax.Array:
+    """Full-sequence (train / prefill) causal self-attention."""
+    B, S, _ = x.shape
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = _split_heads(x @ p["wq"], H, hd)
+    k = _split_heads(x @ p["wk"], K, hd)
+    v = _split_heads(x @ p["wv"], K, hd)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    if cfg.use_flash_kernel and cfg.causal:
+        from repro.kernels import ops as kops
+        out = kops.flash_attention(q, _gqa_expand(k, H, K), _gqa_expand(v, H, K),
+                                   causal=True, window=window)
+    elif cfg.attn_chunk and S > cfg.attn_chunk:
+        out = _sdpa_chunked(q, _gqa_expand(k, H, K), _gqa_expand(v, H, K),
+                            causal=cfg.causal, window=window,
+                            chunk=cfg.attn_chunk)
+    else:
+        bias = causal_mask(S, window) if cfg.causal else jnp.zeros((S, S), jnp.float32)
+        out = _sdpa(q, _gqa_expand(k, H, K), _gqa_expand(v, H, K), bias,
+                    softmax_bf16=cfg.softmax_bf16)
+    return out.reshape(B, S, H * hd) @ p["wo"]
+
+
+def cross_attention(p: dict, cfg: ModelConfig, x: jax.Array,
+                    kv_feats: jax.Array) -> jax.Array:
+    """x: (B,S,d) attends to kv_feats (B,T,d). No mask, no rope."""
+    B, S, _ = x.shape
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = _split_heads(x @ p["wq"], H, hd)
+    k = _split_heads(kv_feats @ p["wk"], K, hd)
+    v = _split_heads(kv_feats @ p["wv"], K, hd)
+    out = _sdpa(q, _gqa_expand(k, H, K), _gqa_expand(v, H, K), 0.0)
+    return out.reshape(B, S, H * hd) @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# decode path
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, n_slots: int,
+               dtype=jnp.bfloat16) -> KVCache:
+    K, hd = cfg.n_kv_heads, cfg.hd
+    return KVCache(
+        k=jnp.zeros((batch, n_slots, K, hd), dtype),
+        v=jnp.zeros((batch, n_slots, K, hd), dtype),
+        slot_pos=jnp.full((n_slots,), -1, jnp.int32),
+    )
+
+
+def decode_attention(p: dict, cfg: ModelConfig, x: jax.Array, cache: KVCache,
+                     pos: jax.Array, window: int = 0):
+    """One-token decode. x: (B, 1, d); pos: scalar int32 (current position).
+
+    Returns (out (B,1,d), updated cache)."""
+    B = x.shape[0]
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    W = cache.k.shape[1]
+    q = _split_heads(x @ p["wq"], H, hd)
+    k_new = _split_heads(x @ p["wk"], K, hd)
+    v_new = _split_heads(x @ p["wv"], K, hd)
+    posb = jnp.broadcast_to(pos, (B, 1))
+    q = rope(q, posb, cfg.rope_theta)
+    k_new = rope(k_new, posb, cfg.rope_theta)
+
+    slot = pos % W if window else pos
+    k = jax.lax.dynamic_update_slice(cache.k, k_new, (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache.v, v_new, (0, slot, 0, 0))
+    slot_pos = jax.lax.dynamic_update_slice(cache.slot_pos, pos[None], (slot,))
+
+    valid = (slot_pos >= 0) & (slot_pos <= pos)
+    if window:
+        valid &= slot_pos > pos - window
+    bias = jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)  # (W,)
+    out = _sdpa(q, _gqa_expand(k, H, K), _gqa_expand(v, H, K), bias)
+    out = out.reshape(B, 1, H * hd) @ p["wo"]
+    return out, KVCache(k, v, slot_pos)
+
+
+class CrossKV(NamedTuple):
+    k: jax.Array   # (B, T, K, hd)
+    v: jax.Array
+
+
+def cross_kv(p: dict, cfg: ModelConfig, kv_feats: jax.Array) -> CrossKV:
+    K, hd = cfg.n_kv_heads, cfg.hd
+    return CrossKV(_split_heads(kv_feats @ p["wk"], K, hd),
+                   _split_heads(kv_feats @ p["wv"], K, hd))
+
+
+def decode_cross_attention(p: dict, cfg: ModelConfig, x: jax.Array,
+                           ckv: CrossKV) -> jax.Array:
+    B = x.shape[0]
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = _split_heads(x @ p["wq"], H, hd)
+    out = _sdpa(q, _gqa_expand(ckv.k, H, K), _gqa_expand(ckv.v, H, K), 0.0)
+    return out.reshape(B, 1, H * hd) @ p["wo"]

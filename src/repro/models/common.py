@@ -1,0 +1,99 @@
+"""Shared model pieces: norms, RoPE, embeddings, attention masks."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sharding.policy import ParamDef
+
+
+# ---------------------------------------------------------------------------
+# norms (fp32 compute, param dtype fp32 for stability)
+# ---------------------------------------------------------------------------
+
+def schema_norm(d_model: int, kind: str = "rmsnorm") -> dict:
+    s = {"scale": ParamDef((d_model,), (None,), init="ones", dtype="float32")}
+    if kind == "layernorm":
+        s["bias"] = ParamDef((d_model,), (None,), init="zeros", dtype="float32")
+    return s
+
+
+def norm_apply(p: dict, x: jax.Array, kind: str = "rmsnorm", eps: float = 1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        y = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+        return (y * p["scale"]).astype(dt)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.mean((x32 - mu) ** 2, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"] + p["bias"]).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (np.arange(0, half, dtype=np.float32) * 2.0 / hd))
+    ang = positions[..., None].astype(jnp.float32) * freqs        # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]                               # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# embeddings / unembedding
+# ---------------------------------------------------------------------------
+
+def schema_embed(vocab: int, d_model: int) -> dict:
+    return {
+        "tok": ParamDef((vocab, d_model), ("vocab", "fsdp"), init="embed"),
+        "out": ParamDef((d_model, vocab), ("fsdp", "vocab"), init="fan_in"),
+    }
+
+
+def embed(p: dict, tokens: jax.Array) -> jax.Array:
+    return jnp.take(p["tok"], tokens, axis=0)
+
+
+def unembed(p: dict, x: jax.Array) -> jax.Array:
+    return x @ p["out"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# masks
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def seq_shard(x: jax.Array, cfg) -> jax.Array:
+    """Sequence-parallel sharding constraint on the residual stream
+    (B, S, d): seq dim -> tp axis.  Turns per-block TP all-reduces into
+    reduce-scatter (+ later all-gather) = half the collective bytes, and
+    runs norms/FFN pointwise work on S/tp tokens per device (Korthikanti
+    et al.). No-op unless cfg.seq_parallel and the launcher set mesh_axes."""
+    if not getattr(cfg, "seq_parallel", False) or not cfg.mesh_axes:
+        return x
+    from jax.sharding import PartitionSpec as P
+    from repro.sharding.policy import batch_pspec
+    dp = batch_pspec(cfg.mesh_axes)
+    spec = P(dp, "model", *([None] * (x.ndim - 2)))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def causal_mask(S: int, window: int = 0) -> jax.Array:
+    """(S, S) additive mask; ``window`` > 0 adds a sliding-window constraint."""
+    i = jnp.arange(S)[:, None]
+    j = jnp.arange(S)[None, :]
+    ok = j <= i
+    if window:
+        ok &= (i - j) < window
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)

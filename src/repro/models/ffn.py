@@ -1,0 +1,130 @@
+"""Feed-forward blocks: dense (swiglu / squared-relu / gelu) and MoE.
+
+The MoE uses a scatter-based capacity dispatch (sort-free rank computation
+via scatter-add counters) rather than the one-hot (tokens, experts, capacity)
+einsum: the dense dispatch mask is O(N*E*C) and does not fit HBM at
+(1M tokens x 384 experts); the scatter form is O(N*k) index traffic plus the
+inherent (E*C, d) expert buffer, and GSPMD lowers the expert-sharded scatter
+to an all-to-all — exactly the collective a hand-written expert-parallel
+implementation would issue.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.sharding.policy import ParamDef
+
+
+def schema_ffn(cfg: ModelConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.ffn_type == "swiglu":
+        return {
+            "w_gate": ParamDef((d, f), ("fsdp", "tp")),
+            "w_up": ParamDef((d, f), ("fsdp", "tp")),
+            "w_down": ParamDef((f, d), ("tp", "fsdp")),
+        }
+    return {  # squared_relu | gelu: plain 2-matrix MLP
+        "w_in": ParamDef((d, f), ("fsdp", "tp")),
+        "w_out": ParamDef((f, d), ("tp", "fsdp")),
+    }
+
+
+def ffn(p: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    if cfg.ffn_type == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+        return h @ p["w_down"]
+    h = x @ p["w_in"]
+    if cfg.ffn_type == "squared_relu":        # nemotron-4 [arXiv:2402.16819]
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        h = jax.nn.gelu(h)
+    return h @ p["w_out"]
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts
+# ---------------------------------------------------------------------------
+
+def schema_moe(cfg: ModelConfig) -> dict:
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    return {
+        "router": ParamDef((d, E), ("fsdp", None), dtype="float32"),
+        "w_gate": ParamDef((E, d, f), ("ep", "fsdp", None)),
+        "w_up": ParamDef((E, d, f), ("ep", "fsdp", None)),
+        "w_down": ParamDef((E, f, d), ("ep", None, "fsdp")),
+    }
+
+
+def moe(p: dict, cfg: ModelConfig, x: jax.Array):
+    """x: (B, S, d) -> (y (B,S,d), aux_loss scalar fp32).
+
+    Top-k softmax routing with per-expert capacity C = ceil(N*k/E * cf);
+    overflow tokens are dropped (contribute zero), standard Switch behaviour.
+    """
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.experts_per_token
+    N = B * S
+    if cfg.seq_parallel and cfg.mesh_axes:
+        # under sequence parallelism the residual stream is seq-sharded on
+        # the tp axis; the scatter dispatch into the expert-sharded buffer
+        # would otherwise lower to per-layer collective-permute storms
+        # (measured: 66 -> 2753 GB/dev on kimi train). Re-shard tokens to
+        # batch-only before routing so dispatch crosses only the ep axis.
+        from jax.sharding import PartitionSpec as P
+        from repro.sharding.policy import batch_pspec
+        x = jax.lax.with_sharding_constraint(
+            x, P(batch_pspec(cfg.mesh_axes), None, None))
+    xt = x.reshape(N, d)
+
+    logits = (xt.astype(jnp.float32) @ p["router"])               # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(probs, k)                          # (N, k)
+    topw = topw / jnp.sum(topw, axis=-1, keepdims=True)           # renormalize
+
+    # Switch aux load-balance loss: E * sum_e fraction_tokens_e * mean_prob_e
+    me = jnp.mean(probs, axis=0)                                  # (E,)
+    onehot_top1 = jax.nn.one_hot(topi[:, 0], E, dtype=jnp.float32)
+    ce = jnp.mean(onehot_top1, axis=0)
+    aux = E * jnp.sum(me * ce)
+
+    # --- dispatch ----------------------------------------------------------
+    C = int(np.ceil(N * k / E * cfg.capacity_factor))
+    eid = topi.reshape(N * k)                                     # (Nk,)
+    w = topw.reshape(N * k).astype(x.dtype)
+    tok = jnp.repeat(jnp.arange(N, dtype=jnp.int32), k)
+
+    # rank of each entry within its expert, in entry order
+    order = jnp.argsort(eid)                                      # stable
+    eid_s = eid[order]
+    counts = jnp.zeros((E,), jnp.int32).at[eid].add(1)
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                              jnp.cumsum(counts)[:-1]])
+    rank_s = jnp.arange(N * k, dtype=jnp.int32) - starts[eid_s]
+    tok_s = tok[order]
+    w_s = w[order]
+    valid = rank_s < C
+    dest = jnp.where(valid, eid_s * C + rank_s, E * C)            # E*C = drop slot
+
+    buf = jnp.zeros((E * C + 1, d), x.dtype).at[dest].set(xt[tok_s])
+    ein = buf[:-1].reshape(E, C, d)
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", ein, p["w_gate"])) * \
+        jnp.einsum("ecd,edf->ecf", ein, p["w_up"])
+    eout = jnp.einsum("ecf,efd->ecd", h, p["w_down"])             # (E, C, d)
+
+    # Combine formulated as a SCATTER-ADD from the expert-sharded buffer
+    # into token order — NOT a gather. GSPMD cannot shard a gather whose
+    # operand is expert-sharded (it replicates the (E*C, d) buffer on every
+    # device: measured 112 TB/device on kimi-k2 train), whereas the mirror
+    # scatter lowers like the dispatch direction (~3 TB). We scatter each
+    # slot's weighted output row to its owning token; dropped entries land
+    # in the N-th (trash) row.
+    tok_of_slot = jnp.full((E * C + 1,), N, jnp.int32).at[dest].set(tok_s)
+    w_of_slot = jnp.zeros((E * C + 1,), x.dtype).at[dest].set(w_s)
+    flat = eout.reshape(E * C, d)
+    contrib = flat * w_of_slot[:-1, None]
+    y = jnp.zeros((N + 1, d), x.dtype).at[tok_of_slot[:-1]].add(contrib)[:-1]
+    return y.reshape(B, S, d), aux.astype(jnp.float32)

@@ -1,0 +1,205 @@
+"""Hybrid and xLSTM stack assembly.
+
+zamba2 [arXiv:2411.15242]: Mamba2 backbone with ONE shared attention+MLP
+block applied after every ``attn_period`` mamba layers (parameter sharing —
+the shared block's gradient accumulates across its applications through the
+scan).  Simplification vs the released model (documented in DESIGN.md): the
+shared block consumes the hidden stream directly (no concat-with-embedding
+projector, no per-application LoRA deltas).
+
+xlstm [arXiv:2405.04517]: groups of (slstm_period-1) mLSTM blocks closed by
+one sLSTM block.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import mamba2, xlstm
+from repro.models.common import embed, norm_apply, schema_embed, schema_norm, unembed
+from repro.models.transformer import block_decode, block_fwd, schema_block
+from repro.sharding.policy import stack
+
+
+# ---------------------------------------------------------------------------
+# zamba2
+# ---------------------------------------------------------------------------
+
+def schema_zamba(cfg: ModelConfig) -> dict:
+    assert cfg.n_layers % cfg.attn_period == 0
+    G = cfg.n_layers // cfg.attn_period
+    return {
+        "embed": schema_embed(cfg.vocab_size, cfg.d_model),
+        "mamba": stack(stack(mamba2.schema_mamba_block(cfg), cfg.attn_period), G),
+        "shared": schema_block(cfg),           # ONE block, applied G times
+        "ln_f": schema_norm(cfg.d_model, cfg.norm),
+    }
+
+
+def zamba_hidden(params: dict, cfg: ModelConfig, inputs: dict):
+    tokens = inputs["tokens"]
+    B, S = tokens.shape
+    x = embed(params["embed"], tokens).astype(jnp.dtype(cfg.dtype))
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    mblock = (jax.checkpoint(mamba2.mamba_block, static_argnums=(1,))
+              if cfg.remat else mamba2.mamba_block)
+    ablock = (jax.checkpoint(block_fwd, static_argnums=(1, 4))
+              if cfg.remat else block_fwd)
+
+    def group(x, gp):
+        def inner(x, lp):
+            return mblock(lp, cfg, x), None
+        x, _ = jax.lax.scan(inner, x, gp)
+        x, _ = ablock(params["shared"], cfg, x, positions, cfg.sliding_window)
+        return x, None
+
+    x, _ = jax.lax.scan(group, x, params["mamba"])
+    x = norm_apply(params["ln_f"], x, cfg.norm)
+    return x, jnp.zeros((), jnp.float32)
+
+
+def zamba_logits(params: dict, cfg: ModelConfig, inputs: dict):
+    x, aux = zamba_hidden(params, cfg, inputs)
+    return unembed(params["embed"], x), aux
+
+
+class ZambaCache(NamedTuple):
+    conv: jax.Array      # (G, period, B, W-1, ch)
+    ssm: jax.Array       # (G, period, B, H, N, P)
+    k: jax.Array         # (G, B, W, K, hd)
+    v: jax.Array
+    slot_pos: jax.Array  # (G, W)
+
+
+def zamba_init_cache(cfg: ModelConfig, batch: int, n_slots: int, dtype) -> ZambaCache:
+    G = cfg.n_layers // cfg.attn_period
+    ms = mamba2.init_state(cfg, batch, dtype)
+    kv = attn.init_cache(cfg, batch, n_slots, dtype)
+    tile = lambda a, pre: jnp.broadcast_to(a, pre + a.shape).copy()
+    return ZambaCache(
+        conv=tile(ms.conv, (G, cfg.attn_period)),
+        ssm=tile(ms.ssm, (G, cfg.attn_period)),
+        k=tile(kv.k, (G,)), v=tile(kv.v, (G,)),
+        slot_pos=tile(kv.slot_pos, (G,)),
+    )
+
+
+def zamba_decode(params: dict, cfg: ModelConfig, token: jax.Array,
+                 cache: ZambaCache, pos: jax.Array, window: int):
+    x = embed(params["embed"], token[:, None]).astype(jnp.dtype(cfg.dtype))
+    pos = pos.astype(jnp.int32)
+
+    def group(x, layer):
+        gp, (conv, ssm, k, v, sp) = layer
+
+        def inner(x, sl):
+            lp, (c, s) = sl
+            x, ns = mamba2.mamba_decode(lp, cfg, x, mamba2.MambaState(c, s))
+            return x, (ns.conv, ns.ssm)
+
+        x, (nconv, nssm) = jax.lax.scan(inner, x, (gp, (conv, ssm)))
+        x, nkv = block_decode(params["shared"], cfg, x, attn.KVCache(k, v, sp),
+                              pos, window)
+        return x, (nconv, nssm, nkv.k, nkv.v, nkv.slot_pos)
+
+    x, new = jax.lax.scan(group, x, (params["mamba"],
+                                     (cache.conv, cache.ssm, cache.k, cache.v,
+                                      cache.slot_pos)))
+    x = norm_apply(params["ln_f"], x, cfg.norm)
+    logits = unembed(params["embed"], x)[:, 0]
+    return logits, ZambaCache(*new)
+
+
+# ---------------------------------------------------------------------------
+# xLSTM
+# ---------------------------------------------------------------------------
+
+def schema_xlstm(cfg: ModelConfig) -> dict:
+    assert cfg.n_layers % cfg.slstm_period == 0
+    G = cfg.n_layers // cfg.slstm_period
+    group = {
+        "mlstms": stack(xlstm.schema_mlstm(cfg), cfg.slstm_period - 1),
+        "slstm": xlstm.schema_slstm(cfg),
+    }
+    return {
+        "embed": schema_embed(cfg.vocab_size, cfg.d_model),
+        "groups": stack(group, G),
+        "ln_f": schema_norm(cfg.d_model, cfg.norm),
+    }
+
+
+def xlstm_hidden(params: dict, cfg: ModelConfig, inputs: dict):
+    tokens = inputs["tokens"]
+    x = embed(params["embed"], tokens).astype(jnp.dtype(cfg.dtype))
+
+    mlblock = (jax.checkpoint(xlstm.mlstm_block, static_argnums=(1,))
+               if cfg.remat else xlstm.mlstm_block)
+    slblock = (jax.checkpoint(xlstm.slstm_block, static_argnums=(1,))
+               if cfg.remat else xlstm.slstm_block)
+
+    def group(x, gp):
+        def inner(x, lp):
+            return mlblock(lp, cfg, x), None
+        x, _ = jax.lax.scan(inner, x, gp["mlstms"])
+        x = slblock(gp["slstm"], cfg, x)
+        return x, None
+
+    x, _ = jax.lax.scan(group, x, params["groups"])
+    x = norm_apply(params["ln_f"], x, cfg.norm)
+    return x, jnp.zeros((), jnp.float32)
+
+
+def xlstm_logits(params: dict, cfg: ModelConfig, inputs: dict):
+    x, aux = xlstm_hidden(params, cfg, inputs)
+    return unembed(params["embed"], x), aux
+
+
+class XLSTMCache(NamedTuple):
+    mC: jax.Array   # (G, period-1, B, H, P, P)
+    mn: jax.Array   # (G, period-1, B, H, P)
+    sc: jax.Array   # (G, B, H, Pd)
+    sn: jax.Array
+    sh: jax.Array
+    sm: jax.Array
+
+
+def xlstm_init_cache(cfg: ModelConfig, batch: int) -> XLSTMCache:
+    G = cfg.n_layers // cfg.slstm_period
+    m = xlstm.mlstm_init_state(cfg, batch)
+    s = xlstm.slstm_init_state(cfg, batch)
+    tile = lambda a, pre: jnp.broadcast_to(a, pre + a.shape).copy()
+    return XLSTMCache(
+        mC=tile(m.C, (G, cfg.slstm_period - 1)),
+        mn=tile(m.n, (G, cfg.slstm_period - 1)),
+        sc=tile(s.c, (G,)), sn=tile(s.n, (G,)),
+        sh=tile(s.h, (G,)), sm=tile(s.m, (G,)),
+    )
+
+
+def xlstm_decode(params: dict, cfg: ModelConfig, token: jax.Array,
+                 cache: XLSTMCache, pos: jax.Array, window: int = 0):
+    del pos, window   # recurrent: position-free
+    x = embed(params["embed"], token[:, None]).astype(jnp.dtype(cfg.dtype))
+
+    def group(x, layer):
+        gp, (mC, mn, sc, sn, sh, sm) = layer
+
+        def inner(x, sl):
+            lp, (C, n) = sl
+            x, ns = xlstm.mlstm_decode(lp, cfg, x, xlstm.MLSTMState(C, n))
+            return x, (ns.C, ns.n)
+
+        x, (nmC, nmn) = jax.lax.scan(inner, x, (gp["mlstms"], (mC, mn)))
+        x, ns = xlstm.slstm_decode(gp["slstm"], cfg, x,
+                                   xlstm.SLSTMState(sc, sn, sh, sm))
+        return x, (nmC, nmn, ns.c, ns.n, ns.h, ns.m)
+
+    x, new = jax.lax.scan(group, x, (params["groups"], tuple(cache)))
+    x = norm_apply(params["ln_f"], x, cfg.norm)
+    logits = unembed(params["embed"], x)[:, 0]
+    return logits, XLSTMCache(*new)

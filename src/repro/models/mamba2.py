@@ -1,0 +1,193 @@
+"""Mamba2 (SSD) blocks — TPU-adapted chunked form.
+
+Hardware adaptation note (see DESIGN.md): the reference CUDA Mamba2 kernel
+is a fused warp-level scan; on TPU the idiomatic form is the *chunked SSD*
+algorithm — intra-chunk contributions become dense (Lc x Lc) matmuls that
+map onto the MXU, and only the O(S / Lc) inter-chunk state propagation is a
+sequential ``lax.scan``.  Chunk length defaults to 256 (two 128-lanes tiles).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import norm_apply, schema_norm
+from repro.sharding.policy import ParamDef
+
+
+class MambaState(NamedTuple):
+    conv: jax.Array   # (B, conv_width-1, conv_channels)
+    ssm: jax.Array    # (B, H, N, P) fp32
+
+
+def conv_channels(cfg: ModelConfig) -> int:
+    return cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+
+
+def schema_mamba_block(cfg: ModelConfig) -> dict:
+    d, di = cfg.d_model, cfg.d_inner
+    G, N, H = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    ch = conv_channels(cfg)
+    return {
+        "ln": schema_norm(d, cfg.norm),
+        "in_proj": ParamDef((d, 2 * di + 2 * G * N + H), ("fsdp", "tp")),
+        "conv_w": ParamDef((cfg.conv_width, ch), (None, "tp"), init="fan_in"),
+        "conv_b": ParamDef((ch,), ("tp",), init="zeros"),
+        "A_log": ParamDef((H,), (None,), init="mamba_A", dtype="float32"),
+        "dt_bias": ParamDef((H,), (None,), init="dt_bias", dtype="float32"),
+        "D": ParamDef((H,), (None,), init="ones", dtype="float32"),
+        "ln_gate": schema_norm(di, cfg.norm),
+        "out_proj": ParamDef((di, d), ("tp", "fsdp")),
+    }
+
+
+def _split_proj(cfg: ModelConfig, proj: jax.Array):
+    di, G, N, H = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    z, x, Bm, Cm, dt = jnp.split(
+        proj, [di, 2 * di, 2 * di + G * N, 2 * di + 2 * G * N], axis=-1)
+    return z, x, Bm, Cm, dt
+
+
+def _causal_conv(p: dict, x: jax.Array) -> jax.Array:
+    """Depthwise causal conv via shifted adds. x: (B, S, ch)."""
+    W = p["conv_w"].shape[0]
+    w = p["conv_w"].astype(x.dtype)
+    out = x * w[-1]
+    for i in range(1, W):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, :-i, :]
+        out = out + shifted * w[W - 1 - i]
+    return jax.nn.silu(out + p["conv_b"].astype(x.dtype))
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """a: (..., L) log-decays -> (..., L, L) lower-tri cumulative segment sums."""
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    L = a.shape[-1]
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(cfg: ModelConfig, x, dt, A, Bm, Cm, init_state=None):
+    """Chunked selective-state-space scan.
+
+    x: (B,S,H,P) fp32-scaled inputs; dt: (B,S,H) fp32; A: (H,) fp32 (negative);
+    Bm/Cm: (B,S,G,N).  Returns (y (B,S,H,P), final_state (B,H,N,P))."""
+    B_, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    Lc = min(cfg.ssm_chunk, S)
+    assert S % Lc == 0
+    Nc = S // Lc
+    rep = H // G
+
+    def chunk(t):  # (B,S,...) -> (B,Nc,Lc,...)
+        return t.reshape((B_, Nc, Lc) + t.shape[2:])
+
+    # intra-chunk tensors optionally ride in bf16 (cfg.ssd_bf16): the dense
+    # (Lc x Lc) matmuls are the HBM-traffic hot spot; the inter-chunk state
+    # recurrence below stays fp32 for stability.
+    cdt = jnp.bfloat16 if cfg.ssd_bf16 else jnp.float32
+    xdt = chunk(x * dt[..., None]).astype(cdt)            # (B,Nc,Lc,H,P)
+    a = chunk(dt * A)                                     # (B,Nc,Lc,H) fp32
+    Bh = jnp.repeat(chunk(Bm), rep, axis=3).astype(cdt)   # (B,Nc,Lc,H,N)
+    Ch = jnp.repeat(chunk(Cm), rep, axis=3).astype(cdt)
+
+    cs = jnp.cumsum(a, axis=2)                            # (B,Nc,Lc,H)
+    # intra-chunk: dense (Lc x Lc) decay-weighted attention-like matmuls
+    Lmat = jnp.exp(_segsum(jnp.moveaxis(a, 3, 2))).astype(cdt)
+    scores = jnp.einsum("bclhn,bcshn->bchls", Ch, Bh)
+    y_intra = jnp.einsum("bchls,bcshp->bclhp", scores * Lmat,
+                         xdt).astype(jnp.float32)
+
+    # chunk-final states
+    decay_end = jnp.exp(cs[:, :, -1:, :] - cs).astype(cdt)  # (B,Nc,Lc,H)
+    states = jnp.einsum("bcshn,bcsh,bcshp->bchnp", Bh, decay_end,
+                        xdt).astype(jnp.float32)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(cs[:, :, -1, :])                # (B,Nc,H)
+    h0 = (jnp.zeros((B_, H, N, P), jnp.float32) if init_state is None
+          else init_state)
+
+    def body(h, inp):
+        st, dec = inp
+        h_out = h
+        h = h * dec[:, :, None, None] + st
+        return h, h_out
+
+    hT, h_prev = jax.lax.scan(
+        body, h0, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prev = jnp.moveaxis(h_prev, 0, 1)                   # (B,Nc,H,N,P)
+    y_inter = jnp.einsum("bclhn,bchnp,bclh->bclhp", Ch, h_prev, jnp.exp(cs))
+
+    y = (y_intra + y_inter).reshape(B_, S, H, P)
+    return y, hT
+
+
+def mamba_block(p: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """Full-sequence forward. x: (B,S,d)."""
+    B, S, d = x.shape
+    H, P = cfg.ssm_heads, cfg.ssm_head_dim
+    h = norm_apply(p["ln"], x, cfg.norm)
+    z, xin, Bm, Cm, dt = _split_proj(cfg, h @ p["in_proj"])
+    conv_in = jnp.concatenate([xin, Bm, Cm], axis=-1)
+    conv_out = _causal_conv(p, conv_in)
+    xin, Bm, Cm = jnp.split(
+        conv_out, [cfg.d_inner, cfg.d_inner + cfg.ssm_groups * cfg.ssm_state],
+        axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xh = xin.astype(jnp.float32).reshape(B, S, H, P)
+    Bm = Bm.astype(jnp.float32).reshape(B, S, cfg.ssm_groups, cfg.ssm_state)
+    Cm = Cm.astype(jnp.float32).reshape(B, S, cfg.ssm_groups, cfg.ssm_state)
+    y, _ = ssd_chunked(cfg, xh, dt, A, Bm, Cm)
+    y = y + xh * p["D"][:, None]
+    y = y.reshape(B, S, cfg.d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = norm_apply(p["ln_gate"], y, cfg.norm)
+    return x + y @ p["out_proj"]
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_state(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16) -> MambaState:
+    H, N, P = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim
+    return MambaState(
+        conv=jnp.zeros((batch, cfg.conv_width - 1, conv_channels(cfg)), dtype),
+        ssm=jnp.zeros((batch, H, N, P), jnp.float32),
+    )
+
+
+def mamba_decode(p: dict, cfg: ModelConfig, x: jax.Array, state: MambaState):
+    """x: (B, 1, d) -> (y (B,1,d), new state)."""
+    B = x.shape[0]
+    H, P, N, G = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_groups
+    h = norm_apply(p["ln"], x, cfg.norm)
+    z, xin, Bm, Cm, dt = _split_proj(cfg, h @ p["in_proj"])
+    conv_in = jnp.concatenate([xin, Bm, Cm], axis=-1)[:, 0]      # (B, ch)
+    W = cfg.conv_width
+    w = p["conv_w"].astype(x.dtype)
+    hist = jnp.concatenate([state.conv, conv_in[:, None]], axis=1)  # (B,W,ch)
+    conv_out = jax.nn.silu(jnp.einsum("bwc,wc->bc", hist, w)
+                           + p["conv_b"].astype(x.dtype))
+    new_conv = hist[:, 1:]
+    xin, Bm, Cm = jnp.split(
+        conv_out, [cfg.d_inner, cfg.d_inner + G * N], axis=-1)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt * A)                                       # (B,H)
+    xh = xin.astype(jnp.float32).reshape(B, H, P)
+    Bm = jnp.repeat(Bm.astype(jnp.float32).reshape(B, G, N), H // G, axis=1)
+    Cm = jnp.repeat(Cm.astype(jnp.float32).reshape(B, G, N), H // G, axis=1)
+    upd = jnp.einsum("bh,bhn,bhp->bhnp", dt, Bm, xh)
+    ssm = state.ssm * decay[:, :, None, None] + upd
+    y = jnp.einsum("bhn,bhnp->bhp", Cm, ssm) + xh * p["D"][:, None]
+    y = y.reshape(B, 1, cfg.d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = norm_apply(p["ln_gate"], y, cfg.norm)
+    return x + y @ p["out_proj"], MambaState(new_conv, ssm)

@@ -1,0 +1,90 @@
+"""Model dispatch: one entrypoint per family.
+
+Public surface:
+  schema(cfg)                      -> ParamDef pytree
+  hidden(params, cfg, inputs)      -> (B,S,d) final hidden states, moe aux
+  logits(params, cfg, inputs)      -> (B,S,V) logits, moe aux
+  init_cache(params, cfg, shape)   -> decode cache pytree
+  decode(params, cfg, token, cache, pos, window) -> (logits (B,V), cache)
+  count_params_analytic / count_active_params
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import hybrid, transformer
+from repro.sharding.policy import param_count
+
+
+def schema(cfg: ModelConfig):
+    if cfg.family == "vlm":
+        return transformer.schema_vlm(cfg)
+    if cfg.family == "hybrid":
+        return hybrid.schema_zamba(cfg)
+    if cfg.family == "ssm":
+        return hybrid.schema_xlstm(cfg)
+    return transformer.schema_decoder(cfg)   # dense | moe | audio
+
+
+def hidden(params, cfg: ModelConfig, inputs: dict):
+    if cfg.family == "vlm":
+        return transformer.vlm_hidden(params, cfg, inputs)
+    if cfg.family == "hybrid":
+        return hybrid.zamba_hidden(params, cfg, inputs)
+    if cfg.family == "ssm":
+        return hybrid.xlstm_hidden(params, cfg, inputs)
+    return transformer.decoder_hidden(params, cfg, inputs)
+
+
+def logits(params, cfg: ModelConfig, inputs: dict):
+    if cfg.family == "vlm":
+        return transformer.vlm_logits(params, cfg, inputs)
+    if cfg.family == "hybrid":
+        return hybrid.zamba_logits(params, cfg, inputs)
+    if cfg.family == "ssm":
+        return hybrid.xlstm_logits(params, cfg, inputs)
+    return transformer.decoder_logits(params, cfg, inputs)
+
+
+def supports_decode(cfg: ModelConfig) -> bool:
+    return cfg.family != "audio"
+
+
+def init_cache(params, cfg: ModelConfig, batch: int, n_slots: int,
+               image_embeds=None):
+    dtype = jnp.dtype(cfg.dtype)
+    if cfg.family == "vlm":
+        assert image_embeds is not None
+        return transformer.vlm_init_cache(params, cfg, image_embeds, n_slots, dtype)
+    if cfg.family == "hybrid":
+        return hybrid.zamba_init_cache(cfg, batch, n_slots, dtype)
+    if cfg.family == "ssm":
+        return hybrid.xlstm_init_cache(cfg, batch)
+    return transformer.decoder_init_cache(cfg, batch, n_slots, dtype)
+
+
+def decode(params, cfg: ModelConfig, token, cache, pos, window: int = 0):
+    if cfg.family == "vlm":
+        return transformer.vlm_decode(params, cfg, token, cache, pos, window)
+    if cfg.family == "hybrid":
+        return hybrid.zamba_decode(params, cfg, token, cache, pos, window)
+    if cfg.family == "ssm":
+        return hybrid.xlstm_decode(params, cfg, token, cache, pos, window)
+    return transformer.decoder_decode(params, cfg, token, cache, pos, window)
+
+
+def count_params_analytic(cfg: ModelConfig) -> int:
+    return param_count(schema(cfg))
+
+
+def count_active_params(cfg: ModelConfig) -> int:
+    """Active params per token (MoE: only top-k experts count)."""
+    total = count_params_analytic(cfg)
+    if cfg.n_experts == 0:
+        return total
+    bank = 3 * cfg.n_experts * cfg.d_model * cfg.d_ff * cfg.n_layers
+    active = bank * cfg.experts_per_token // cfg.n_experts
+    return total - bank + active

@@ -1,0 +1,310 @@
+"""Transformer stacks: dense / MoE decoder, encoder-only, and VLM
+(cross-attention groups, llama-3.2-vision style).
+
+All homogeneous layer stacks are scanned (``jax.lax.scan`` over stacked
+params) so HLO size / compile time stays flat in depth — required to lower
+48-61-layer configs on the CPU host in the dry-run.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import ffn as ffn_mod
+from repro.models.common import (embed, norm_apply, schema_embed, schema_norm,
+                                 seq_shard, unembed)
+from repro.sharding.policy import ParamDef, stack
+
+
+# ---------------------------------------------------------------------------
+# one decoder block (self-attn + mlp/moe)
+# ---------------------------------------------------------------------------
+
+def schema_block(cfg: ModelConfig, moe: bool = False) -> dict:
+    return {
+        "ln1": schema_norm(cfg.d_model, cfg.norm),
+        "attn": attn.schema_attention(cfg),
+        "ln2": schema_norm(cfg.d_model, cfg.norm),
+        "mlp": ffn_mod.schema_moe(cfg) if moe else ffn_mod.schema_ffn(cfg),
+    }
+
+
+def _is_moe(cfg: ModelConfig) -> bool:
+    return cfg.n_experts > 0
+
+
+def block_fwd(p: dict, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
+              window: int):
+    h = norm_apply(p["ln1"], x, cfg.norm)
+    x = x + attn.attention(p["attn"], cfg, h, positions=positions, window=window)
+    h = norm_apply(p["ln2"], x, cfg.norm)
+    if _is_moe(cfg):
+        y, aux = ffn_mod.moe(p["mlp"], cfg, h)
+    else:
+        y, aux = ffn_mod.ffn(p["mlp"], cfg, h), jnp.zeros((), jnp.float32)
+    return x + y, aux
+
+
+def block_decode(p: dict, cfg: ModelConfig, x: jax.Array, cache: attn.KVCache,
+                 pos: jax.Array, window: int):
+    h = norm_apply(p["ln1"], x, cfg.norm)
+    a, cache = attn.decode_attention(p["attn"], cfg, h, cache, pos, window)
+    x = x + a
+    h = norm_apply(p["ln2"], x, cfg.norm)
+    if _is_moe(cfg):
+        y, _ = ffn_mod.moe(p["mlp"], cfg, h)
+    else:
+        y = ffn_mod.ffn(p["mlp"], cfg, h)
+    return x + y, cache
+
+
+# ---------------------------------------------------------------------------
+# dense / MoE decoder (and bidirectional encoder) stack
+# ---------------------------------------------------------------------------
+
+def schema_decoder(cfg: ModelConfig) -> dict:
+    s = {
+        "embed": schema_embed(cfg.vocab_size, cfg.d_model),
+        "blocks": stack(schema_block(cfg, moe=_is_moe(cfg)), cfg.n_layers),
+        "ln_f": schema_norm(cfg.d_model, cfg.norm),
+    }
+    if cfg.family == "audio":   # frames arrive pre-embedded; no token table
+        s["embed"] = {"out": s["embed"]["out"]}
+    return s
+
+
+def _scan_blocks(params_blocks, cfg, x, positions, window):
+    def body(carry, lp):
+        x, aux = carry
+        fn = block_fwd
+        if cfg.remat:
+            fn = jax.checkpoint(block_fwd, static_argnums=(1, 4))
+        x = seq_shard(x, cfg)
+        x, a = fn(lp, cfg, x, positions, window)
+        return (x, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                               params_blocks)
+    return x, aux
+
+
+def decoder_hidden(params: dict, cfg: ModelConfig, inputs: dict):
+    """Token (or pre-embedded frame) inputs -> final hidden states + moe aux."""
+    if cfg.family == "audio":
+        x = inputs["frames"].astype(jnp.dtype(cfg.dtype))
+        B, S = x.shape[0], x.shape[1]
+    else:
+        tokens = inputs["tokens"]
+        B, S = tokens.shape
+        x = embed(params["embed"], tokens).astype(jnp.dtype(cfg.dtype))
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    x, aux = _scan_blocks(params["blocks"], cfg, x, positions,
+                          cfg.sliding_window)
+    x = norm_apply(params["ln_f"], x, cfg.norm)
+    return x, aux
+
+
+def decoder_logits(params: dict, cfg: ModelConfig, inputs: dict):
+    x, aux = decoder_hidden(params, cfg, inputs)
+    return unembed(params["embed"], x), aux
+
+
+def block_fwd_cache(p: dict, cfg: ModelConfig, x: jax.Array,
+                    positions: jax.Array, window: int):
+    """block_fwd that also emits the roped K/V for cache prefill."""
+    h = norm_apply(p["ln1"], x, cfg.norm)
+    B, S, _ = h.shape
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    from repro.models.common import causal_mask, rope
+    q = (h @ p["attn"]["wq"]).reshape(B, S, H, hd)
+    k = (h @ p["attn"]["wk"]).reshape(B, S, K, hd)
+    v = (h @ p["attn"]["wv"]).reshape(B, S, K, hd)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    bias = causal_mask(S, window)
+    o = attn._sdpa(q, attn._gqa_expand(k, H, K), attn._gqa_expand(v, H, K),
+                   bias)
+    x = x + o.reshape(B, S, H * hd) @ p["attn"]["wo"]
+    h = norm_apply(p["ln2"], x, cfg.norm)
+    if _is_moe(cfg):
+        y, _ = ffn_mod.moe(p["mlp"], cfg, h)
+    else:
+        y = ffn_mod.ffn(p["mlp"], cfg, h)
+    return x + y, (k, v)
+
+
+def decoder_prefill_with_cache(params: dict, cfg: ModelConfig,
+                               tokens: jax.Array, n_slots: int):
+    """Prompt forward that RETURNS the KV cache ready for decode.
+    tokens: (B, S) with S <= n_slots. Returns (last_logits (B,V), KVCache
+    stacked over layers)."""
+    B, S = tokens.shape
+    assert S <= n_slots
+    x = embed(params["embed"], tokens).astype(jnp.dtype(cfg.dtype))
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    def body(x, lp):
+        x, kv = block_fwd_cache(lp, cfg, x, positions, cfg.sliding_window)
+        return x, kv
+
+    x, (ks, vs) = jax.lax.scan(body, x, params["blocks"])
+    x = norm_apply(params["ln_f"], x, cfg.norm)
+    logits = unembed(params["embed"], x)[:, -1]
+
+    pad = n_slots - S
+    dtype = jnp.dtype(cfg.dtype)
+    padkv = lambda t: jnp.pad(t.astype(dtype),
+                              ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    slot_pos = jnp.concatenate([jnp.arange(S, dtype=jnp.int32),
+                                jnp.full((pad,), -1, jnp.int32)])
+    L = cfg.n_layers
+    cache = attn.KVCache(padkv(ks), padkv(vs),
+                         jnp.broadcast_to(slot_pos, (L, n_slots)).copy())
+    return logits, cache
+
+
+def decoder_init_cache(cfg: ModelConfig, batch: int, n_slots: int, dtype):
+    c = attn.init_cache(cfg, batch, n_slots, dtype)
+    L = cfg.n_layers
+    return attn.KVCache(*(jnp.broadcast_to(a, (L,) + a.shape).copy()
+                          if hasattr(a, "shape") else a for a in
+                          (c.k, c.v, c.slot_pos)))
+
+
+def decoder_decode(params: dict, cfg: ModelConfig, token: jax.Array,
+                   cache: attn.KVCache, pos: jax.Array, window: int):
+    """token: (B,) int32 -> (logits (B, vocab), new cache)."""
+    x = embed(params["embed"], token[:, None]).astype(jnp.dtype(cfg.dtype))
+    pos = pos.astype(jnp.int32)
+
+    def body(x, layer):
+        lp, lc = layer
+        x, nc = block_decode(lp, cfg, x, attn.KVCache(*lc), pos, window)
+        return x, nc
+
+    x, ncache = jax.lax.scan(body, x, (params["blocks"],
+                                       (cache.k, cache.v, cache.slot_pos)))
+    x = norm_apply(params["ln_f"], x, cfg.norm)
+    logits = unembed(params["embed"], x)[:, 0]
+    return logits, attn.KVCache(*ncache)
+
+
+# ---------------------------------------------------------------------------
+# VLM: groups of (cross_attn_period - 1) self blocks + 1 cross block
+# ---------------------------------------------------------------------------
+
+def schema_cross_block(cfg: ModelConfig) -> dict:
+    return {
+        "ln1": schema_norm(cfg.d_model, cfg.norm),
+        "xattn": attn.schema_attention(cfg, cross=True),
+        "gate": ParamDef((1,), (None,), init="zeros", dtype="float32"),
+        "ln2": schema_norm(cfg.d_model, cfg.norm),
+        "mlp": ffn_mod.schema_ffn(cfg),
+    }
+
+
+def schema_vlm(cfg: ModelConfig) -> dict:
+    g = cfg.cross_attn_period
+    assert cfg.n_layers % g == 0, "vlm layers must tile into cross groups"
+    G = cfg.n_layers // g
+    group = {
+        "selfs": stack(schema_block(cfg), g - 1),
+        "cross": schema_cross_block(cfg),
+    }
+    return {
+        "embed": schema_embed(cfg.vocab_size, cfg.d_model),
+        "groups": stack(group, G),
+        "ln_f": schema_norm(cfg.d_model, cfg.norm),
+    }
+
+
+def _cross_block_fwd(p, cfg, x, img):
+    h = norm_apply(p["ln1"], x, cfg.norm)
+    gate = jnp.tanh(p["gate"]).astype(x.dtype)
+    x = x + gate * attn.cross_attention(p["xattn"], cfg, h, img)
+    h = norm_apply(p["ln2"], x, cfg.norm)
+    return x + ffn_mod.ffn(p["mlp"], cfg, h)
+
+
+def vlm_hidden(params: dict, cfg: ModelConfig, inputs: dict):
+    tokens, img = inputs["tokens"], inputs["image_embeds"]
+    B, S = tokens.shape
+    x = embed(params["embed"], tokens).astype(jnp.dtype(cfg.dtype))
+    img = img.astype(x.dtype)
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    xblock = (jax.checkpoint(_cross_block_fwd, static_argnums=(1,))
+              if cfg.remat else _cross_block_fwd)
+
+    def group_body(x, gp):
+        x, _ = _scan_blocks(gp["selfs"], cfg, x, positions, cfg.sliding_window)
+        x = xblock(gp["cross"], cfg, x, img)
+        return x, None
+
+    x, _ = jax.lax.scan(group_body, x, params["groups"])
+    x = norm_apply(params["ln_f"], x, cfg.norm)
+    return x, jnp.zeros((), jnp.float32)
+
+
+def vlm_logits(params: dict, cfg: ModelConfig, inputs: dict):
+    x, aux = vlm_hidden(params, cfg, inputs)
+    return unembed(params["embed"], x), aux
+
+
+class VLMCache(NamedTuple):
+    k: jax.Array         # (G, g-1, B, W, K, hd)
+    v: jax.Array
+    slot_pos: jax.Array  # (G, g-1, W)
+    xk: jax.Array        # (G, B, T, K, hd)
+    xv: jax.Array
+
+
+def vlm_init_cache(params: dict, cfg: ModelConfig, image_embeds: jax.Array,
+                   n_slots: int, dtype) -> VLMCache:
+    g = cfg.cross_attn_period
+    G = cfg.n_layers // g
+    B = image_embeds.shape[0]
+    c = attn.init_cache(cfg, B, n_slots, dtype)
+
+    def per_group(gp, img):
+        ckv = attn.cross_kv(gp["cross"]["xattn"], cfg, img.astype(dtype))
+        return ckv.k, ckv.v
+
+    xk, xv = jax.vmap(per_group, in_axes=(0, None))(params["groups"],
+                                                    image_embeds)
+    tile = lambda a: jnp.broadcast_to(a, (G, g - 1) + a.shape).copy()
+    return VLMCache(tile(c.k), tile(c.v), tile(c.slot_pos), xk, xv)
+
+
+def vlm_decode(params: dict, cfg: ModelConfig, token: jax.Array,
+               cache: VLMCache, pos: jax.Array, window: int):
+    x = embed(params["embed"], token[:, None]).astype(jnp.dtype(cfg.dtype))
+    pos = pos.astype(jnp.int32)
+
+    def group_body(x, layer):
+        gp, (k, v, sp, xk, xv) = layer
+
+        def self_body(x, sl):
+            lp, lc = sl
+            x, nc = block_decode(lp, cfg, x, attn.KVCache(*lc), pos, window)
+            return x, nc
+
+        x, nself = jax.lax.scan(self_body, x, (gp["selfs"], (k, v, sp)))
+        h = norm_apply(gp["cross"]["ln1"], x, cfg.norm)
+        gate = jnp.tanh(gp["cross"]["gate"]).astype(x.dtype)
+        x = x + gate * attn.decode_cross_attention(
+            gp["cross"]["xattn"], cfg, h, attn.CrossKV(xk, xv))
+        h = norm_apply(gp["cross"]["ln2"], x, cfg.norm)
+        x = x + ffn_mod.ffn(gp["cross"]["mlp"], cfg, h)
+        return x, nself
+
+    x, (nk, nv, nsp) = jax.lax.scan(
+        group_body, x,
+        (params["groups"], (cache.k, cache.v, cache.slot_pos, cache.xk, cache.xv)))
+    x = norm_apply(params["ln_f"], x, cfg.norm)
+    logits = unembed(params["embed"], x)[:, 0]
+    return logits, VLMCache(nk, nv, nsp, cache.xk, cache.xv)

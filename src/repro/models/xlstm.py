@@ -1,0 +1,234 @@
+"""xLSTM blocks: chunked-parallel mLSTM + sequential sLSTM [arXiv:2405.04517].
+
+TPU adaptation (DESIGN.md): mLSTM's matrix memory C_t = f_t C_{t-1} +
+i_t v_t k_t^T admits the same chunked decay-matmul decomposition as SSD, so
+the training path is MXU matmuls with an O(S/Lc) inter-chunk scan.  sLSTM has
+state->gate feedback (recurrent R weights) and is *inherently* sequential —
+it stays a ``lax.scan`` over time; the assigned config places one sLSTM per
+``slstm_period`` blocks so the sequential fraction is small.
+
+Simplifications (documented): the max-stabilizer m_t is replaced by the
+bounded normalizer denom = max(|q . n|, 1) from the official inference code;
+input/forget gates are computed from the current input only for mLSTM (as in
+the paper) and with recurrent feedback for sLSTM (as in the paper).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import norm_apply, schema_norm
+from repro.sharding.policy import ParamDef
+
+
+class MLSTMState(NamedTuple):
+    C: jax.Array   # (B, H, P, P) fp32 matrix memory
+    n: jax.Array   # (B, H, P) fp32 normalizer
+
+
+class SLSTMState(NamedTuple):
+    c: jax.Array   # (B, H, P) fp32
+    n: jax.Array
+    h: jax.Array
+    m: jax.Array   # log-stabilizer
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def _mlstm_dims(cfg: ModelConfig):
+    di = cfg.d_inner
+    H = cfg.n_heads
+    return di, H, di // H
+
+
+def schema_mlstm(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    di, H, P = _mlstm_dims(cfg)
+    return {
+        "ln": schema_norm(d, cfg.norm),
+        "w_up": ParamDef((d, 2 * di), ("fsdp", "tp")),
+        "wq": ParamDef((di, di), (None, "tp")),
+        "wk": ParamDef((di, di), (None, "tp")),
+        "wv": ParamDef((di, di), (None, "tp")),
+        "w_if": ParamDef((di, 2 * H), (None, None), init="small", dtype="float32"),
+        "b_i": ParamDef((H,), (None,), init="zeros", dtype="float32"),
+        "b_f": ParamDef((H,), (None,), init="ones", dtype="float32"),
+        "ln_out": schema_norm(di, cfg.norm),
+        "w_down": ParamDef((di, d), ("tp", "fsdp")),
+    }
+
+
+def _heads(x, H, P):
+    return x.reshape(x.shape[:-1] + (H, P))
+
+
+def mlstm_block(p: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """Chunked-parallel full-sequence mLSTM. x: (B,S,d)."""
+    B, S, _ = x.shape
+    di, H, P = _mlstm_dims(cfg)
+    h = norm_apply(p["ln"], x, cfg.norm)
+    up = h @ p["w_up"]
+    xin, z = jnp.split(up, 2, axis=-1)
+    q = _heads(xin @ p["wq"], H, P).astype(jnp.float32)
+    k = _heads(xin @ p["wk"], H, P).astype(jnp.float32) / jnp.sqrt(P).astype(jnp.float32)
+    v = _heads(xin @ p["wv"], H, P).astype(jnp.float32)
+    gates = xin.astype(jnp.float32) @ p["w_if"]                   # (B,S,2H)
+    ig, fg = jnp.split(gates, 2, axis=-1)
+    logi = ig + p["b_i"]                                          # pre-exp input gate
+    logf = jax.nn.log_sigmoid(fg + p["b_f"])                      # (B,S,H)
+
+    Lc = min(cfg.ssm_chunk, S)
+    assert S % Lc == 0
+    Nc = S // Lc
+    ch = lambda t: t.reshape((B, Nc, Lc) + t.shape[2:])
+    qc, kc, vc = ch(q), ch(k), ch(v)
+    a = ch(logf)                                                  # (B,Nc,Lc,H)
+    li = ch(logi)
+    cs = jnp.cumsum(a, axis=2)
+
+    # intra-chunk: D[l,s] = exp(cs_l - cs_s + logi_s) for l >= s
+    diff = cs[:, :, :, None, :] - cs[:, :, None, :, :]            # (B,Nc,L,S,H)
+    Dmat = jnp.where(
+        jnp.tril(jnp.ones((Lc, Lc), bool))[None, None, :, :, None],
+        jnp.exp(diff + li[:, :, None, :, :]), 0.0)
+    scores = jnp.einsum("bclhp,bcshp->bclsh", qc, kc) * Dmat
+    y_intra = jnp.einsum("bclsh,bcshp->bclhp", scores, vc)
+
+    # chunk-final (C, n) contributions
+    decay_end = jnp.exp(cs[:, :, -1:, :] - cs + li)               # (B,Nc,Lc,H)
+    Cstate = jnp.einsum("bcsh,bcshp,bcshq->bchpq", decay_end, kc, vc)
+    nstate = jnp.einsum("bcsh,bcshp->bchp", decay_end, kc)
+    chunk_decay = jnp.exp(cs[:, :, -1, :])
+
+    def body(carry, inp):
+        C, n = carry
+        Cc, nc_, dec = inp
+        out = (C, n)
+        C = C * dec[:, :, None, None] + Cc
+        n = n * dec[:, :, None] + nc_
+        return (C, n), out
+
+    C0 = jnp.zeros((B, H, P, P), jnp.float32)
+    n0 = jnp.zeros((B, H, P), jnp.float32)
+    (_, _), (C_prev, n_prev) = jax.lax.scan(
+        body, (C0, n0),
+        (jnp.moveaxis(Cstate, 1, 0), jnp.moveaxis(nstate, 1, 0),
+         jnp.moveaxis(chunk_decay, 1, 0)))
+    C_prev = jnp.moveaxis(C_prev, 0, 1)                           # (B,Nc,H,P,P)
+    n_prev = jnp.moveaxis(n_prev, 0, 1)                           # (B,Nc,H,P)
+
+    qdec = qc * jnp.exp(cs)[..., None]
+    y_inter = jnp.einsum("bclhp,bchpq->bclhq", qdec, C_prev)
+    n_inter = jnp.einsum("bclhp,bchp->bclh", qdec, n_prev)
+
+    n_tot = jnp.einsum("bclsh->bclh", scores) + n_inter           # q.n accumulated
+    y = (y_intra + y_inter) / jnp.maximum(jnp.abs(n_tot), 1.0)[..., None]
+    y = y.reshape(B, S, di).astype(x.dtype)
+    y = norm_apply(p["ln_out"], y, cfg.norm) * jax.nn.silu(z)
+    return x + y @ p["w_down"]
+
+
+def mlstm_init_state(cfg: ModelConfig, batch: int) -> MLSTMState:
+    _, H, P = _mlstm_dims(cfg)
+    return MLSTMState(jnp.zeros((batch, H, P, P), jnp.float32),
+                      jnp.zeros((batch, H, P), jnp.float32))
+
+
+def mlstm_decode(p: dict, cfg: ModelConfig, x: jax.Array, st: MLSTMState):
+    """x: (B,1,d)."""
+    B = x.shape[0]
+    di, H, P = _mlstm_dims(cfg)
+    h = norm_apply(p["ln"], x, cfg.norm)
+    xin, z = jnp.split(h @ p["w_up"], 2, axis=-1)
+    xin1 = xin[:, 0]
+    q = _heads(xin1 @ p["wq"], H, P).astype(jnp.float32)
+    k = _heads(xin1 @ p["wk"], H, P).astype(jnp.float32) / jnp.sqrt(P).astype(jnp.float32)
+    v = _heads(xin1 @ p["wv"], H, P).astype(jnp.float32)
+    gates = xin1.astype(jnp.float32) @ p["w_if"]
+    ig, fg = jnp.split(gates, 2, axis=-1)
+    i = jnp.exp(ig + p["b_i"])                                    # (B,H)
+    f = jnp.exp(jax.nn.log_sigmoid(fg + p["b_f"]))
+    C = st.C * f[:, :, None, None] + i[:, :, None, None] * \
+        jnp.einsum("bhp,bhq->bhpq", k, v)
+    n = st.n * f[:, :, None] + i[:, :, None] * k
+    num = jnp.einsum("bhp,bhpq->bhq", q, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhp,bhp->bh", q, n)), 1.0)
+    y = (num / den[:, :, None]).reshape(B, 1, di).astype(x.dtype)
+    y = norm_apply(p["ln_out"], y, cfg.norm) * jax.nn.silu(z)
+    return x + y @ p["w_down"], MLSTMState(C, n)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def schema_slstm(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    H = cfg.n_heads
+    P = d // H
+    return {
+        "ln": schema_norm(d, cfg.norm),
+        "wx": ParamDef((d, 4 * d), ("fsdp", "tp")),
+        "r": ParamDef((H, P, 4 * P), (None, None, None), init="fan_in",
+                      dtype="float32"),
+        "b": ParamDef((4 * d,), (None,), init="zeros", dtype="float32"),
+        "ln_out": schema_norm(d, cfg.norm),
+        "w_down": ParamDef((d, d), ("tp", "fsdp")),
+    }
+
+
+def slstm_init_state(cfg: ModelConfig, batch: int) -> SLSTMState:
+    H = cfg.n_heads
+    P = cfg.d_model // H
+    z = jnp.zeros((batch, H, P), jnp.float32)
+    return SLSTMState(z, z, z, z - 1e30)
+
+
+def _slstm_cell(p, cfg, xt, st: SLSTMState):
+    """xt: (B, 4d) precomputed input projection (fp32)."""
+    B = xt.shape[0]
+    H = cfg.n_heads
+    P = cfg.d_model // H
+    rec = jnp.einsum("bhp,hpq->bhq", st.h, p["r"])                # (B,H,4P)
+    g = xt.reshape(B, H, 4 * P) + rec + p["b"].reshape(H, 4 * P)
+    zt, it, ft, ot = jnp.split(g, 4, axis=-1)                     # (B,H,P)
+    zt = jnp.tanh(zt)
+    ot = jax.nn.sigmoid(ot)
+    m_new = jnp.maximum(ft + st.m, it)
+    i_p = jnp.exp(it - m_new)
+    f_p = jnp.exp(ft + st.m - m_new)
+    c = f_p * st.c + i_p * zt
+    n = f_p * st.n + i_p
+    h = ot * c / jnp.maximum(n, 1e-6)
+    return SLSTMState(c, n, h, m_new)
+
+
+def slstm_block(p: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    B, S, d = x.shape
+    hin = norm_apply(p["ln"], x, cfg.norm)
+    xt = (hin @ p["wx"]).astype(jnp.float32)                      # (B,S,4d)
+
+    def body(st, x_t):
+        st = _slstm_cell(p, cfg, x_t, st)
+        return st, st.h
+
+    st0 = slstm_init_state(cfg, B)
+    _, hs = jax.lax.scan(body, st0, jnp.moveaxis(xt, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).reshape(B, S, d).astype(x.dtype)
+    y = norm_apply(p["ln_out"], y, cfg.norm)
+    return x + y @ p["w_down"]
+
+
+def slstm_decode(p: dict, cfg: ModelConfig, x: jax.Array, st: SLSTMState):
+    B = x.shape[0]
+    hin = norm_apply(p["ln"], x, cfg.norm)
+    xt = (hin[:, 0] @ p["wx"]).astype(jnp.float32)
+    st = _slstm_cell(p, cfg, xt, st)
+    y = st.h.reshape(B, 1, cfg.d_model).astype(x.dtype)
+    y = norm_apply(p["ln_out"], y, cfg.norm)
+    return x + y @ p["w_down"], st

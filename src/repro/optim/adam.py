@@ -1,0 +1,63 @@
+"""AdamW on parameter pytrees. Optimizer state inherits param sharding
+(m/v are fp32 mirrors of each param leaf)."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+class AdamW(NamedTuple):
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: float = 1.0
+
+    def init(self, params) -> AdamState:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamState(jnp.zeros((), jnp.int32),
+                         jax.tree.map(zeros, params),
+                         jax.tree.map(zeros, params))
+
+    def update(self, grads, state: AdamState, params):
+        step = state.step + 1
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, self.grad_clip / (gnorm + 1e-12)) \
+            if self.grad_clip else 1.0
+        t = step.astype(jnp.float32)
+        bc1 = 1.0 - self.b1 ** t
+        bc2 = 1.0 - self.b2 ** t
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32) * scale
+            m = self.b1 * m + (1 - self.b1) * g
+            v = self.b2 * v + (1 - self.b2) * g * g
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + self.eps)
+            if self.weight_decay:
+                u = u + self.weight_decay * p.astype(jnp.float32)
+            new_p = p.astype(jnp.float32) - self.lr * u
+            return new_p.astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, grads, state.m, state.v, params)
+        new_p = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, AdamState(step, new_m, new_v), gnorm
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+
+
+def sgd_momentum_init(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,64 @@
+"""LR schedules (pure functions of the int32 step) + a schedule-aware AdamW
+wrapper and microbatched gradient accumulation for the train step."""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1) -> Callable:
+    def lr(step):
+        s = step.astype(jnp.float32)
+        warm = peak_lr * s / max(warmup_steps, 1)
+        prog = jnp.clip((s - warmup_steps) / max(total_steps - warmup_steps, 1),
+                        0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(s < warmup_steps, warm, peak_lr * cos)
+    return lr
+
+
+def constant(lr_value: float) -> Callable:
+    return lambda step: jnp.full((), lr_value, jnp.float32)
+
+
+def accumulate_grads(loss_fn: Callable, n_micro: int) -> Callable:
+    """Wrap loss_fn(params, batch) -> (loss, aux) with microbatch gradient
+    accumulation over the leading batch dim (memory/compute trade — one of
+    the §Perf levers). Batch size must divide n_micro."""
+    if n_micro <= 1:
+        return jax.value_and_grad(loss_fn, has_aux=True)
+
+    def split(batch):
+        def re(x):
+            b = x.shape[0]
+            assert b % n_micro == 0, (b, n_micro)
+            return x.reshape((n_micro, b // n_micro) + x.shape[1:])
+        return jax.tree.map(re, batch)
+
+    def vag(params, batch):
+        micro = split(batch)
+
+        def body(carry, mb):
+            (loss, aux, grads) = carry
+            (l, a), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+            grads = jax.tree.map(jnp.add, grads, g)
+            aux = jax.tree.map(jnp.add, aux, a)
+            return (loss + l, aux, grads), None
+
+        zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+        l0 = jnp.zeros((), jnp.float32)
+        mb0 = jax.tree.map(lambda x: x[0], micro)
+        aux0 = jax.eval_shape(lambda p, b: loss_fn(p, b)[1], params, mb0)
+        zero_aux = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), aux0)
+        (loss, aux, grads), _ = jax.lax.scan(
+            body, (l0, zero_aux, zero_g), micro)
+        scale = 1.0 / n_micro
+        return (loss * scale,
+                jax.tree.map(lambda a: a * scale, aux)), \
+            jax.tree.map(lambda g: g * scale, grads)
+
+    return vag

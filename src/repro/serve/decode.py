@@ -1,0 +1,73 @@
+"""Serving steps: prefill (full forward -> last-token logits) and one-token
+greedy decode against a (possibly sliding-window) KV cache / recurrent state.
+
+``cache_pspecs`` auto-shards cache pytrees: batch dim -> dp, then the largest
+mesh-divisible non-batch dim -> model (for GQA caches whose kv-head count is
+smaller than the tp axis this picks the slots dim — a sequence-parallel
+cache, the TPU analogue of paged/ring KV sharding).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import model as M
+from repro.sharding.policy import batch_pspec
+
+
+def prefill_step(params, cfg: ModelConfig, inputs: dict):
+    lg, _ = M.logits(params, cfg, inputs)
+    return lg[:, -1]
+
+
+def make_decode_step(cfg: ModelConfig, window: int = 0):
+    def step(params, token, cache, pos):
+        logits, cache = M.decode(params, cfg, token, cache, pos, window)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+    return step
+
+
+def decode_window(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    """Sliding-window slots for the given decode shape (0 = full cache)."""
+    if shape.name == "long_500k" and cfg.family not in ("ssm",):
+        return cfg.long_context_window
+    return cfg.sliding_window
+
+
+def n_cache_slots(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    w = decode_window(cfg, shape)
+    return min(shape.seq_len, w) if w else shape.seq_len
+
+
+def _batch_dim(shape: tuple, batch: int) -> int:
+    for i, s in enumerate(shape):
+        if s == batch:
+            return i
+    return -1
+
+
+def cache_pspecs(cache, mesh, batch: int):
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    model_n = sizes.get("model", 1)
+    dp_axes = ("pod", "data") if "pod" in sizes else ("data",)
+    dp_n = int(np.prod([sizes[a] for a in dp_axes]))
+    dp = batch_pspec(mesh.axis_names)
+
+    def spec(x):
+        sh = x.shape
+        ent = [None] * len(sh)
+        b = _batch_dim(sh, batch)
+        if b >= 0 and sh[b] % dp_n == 0 and batch > 1:
+            ent[b] = dp
+        # largest remaining dim divisible by the model axis
+        cand = [(s, i) for i, s in enumerate(sh)
+                if i != b and s % model_n == 0 and s >= model_n]
+        if cand and model_n > 1:
+            _, i = max(cand)
+            ent[i] = "model"
+        return P(*ent)
+
+    return jax.tree.map(spec, cache)

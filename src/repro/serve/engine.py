@@ -1,0 +1,135 @@
+"""Batched serving engine with continuous batching (slot scheduler).
+
+A fixed pool of ``batch`` slots decodes in lockstep against a shared KV
+cache; finished sequences (max-tokens or EOS) are retired and their slot is
+refilled from the request queue by prefilling the new prompt into that
+slot's cache rows. Prefill uses the cache-emitting forward
+(``decoder_prefill_with_cache``), decode is the one-token jitted step —
+the standard disaggregated-serving structure, CPU-sized here.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import model as M
+from repro.models.transformer import decoder_prefill_with_cache
+from repro.serve.decode import make_decode_step
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray              # (S,) int32
+    max_new: int = 16
+    generated: list = field(default_factory=list)
+    done: bool = False
+
+
+@dataclass
+class EngineStats:
+    prefills: int = 0
+    decode_steps: int = 0
+    completed: int = 0
+    tokens_out: int = 0
+
+
+class Engine:
+    """Greedy continuous-batching engine for dense/MoE decoder families."""
+
+    def __init__(self, params, cfg: ModelConfig, *, batch: int,
+                 n_slots: int, eos_id: Optional[int] = None,
+                 prefill_len: int = 32):
+        assert cfg.family in ("dense", "moe"), \
+            "engine supports KV-cache families; SSM/hybrid use decode()"
+        self.params, self.cfg = params, cfg
+        self.batch, self.n_slots = batch, n_slots
+        self.eos_id = eos_id
+        # prompts are right-padded (repeat last token) to a fixed prefill
+        # length so every slot's cache has the same filled prefix — the
+        # shared slot_pos vector then masks identically for all slots.
+        self.prefill_len = prefill_len
+        self.cache = M.init_cache(params, cfg, batch, n_slots)
+        self.pos = np.zeros(batch, np.int32)          # next position per slot
+        self.cur = np.zeros(batch, np.int32)          # last token per slot
+        self.slots: List[Optional[Request]] = [None] * batch
+        self.queue: List[Request] = []
+        self.stats = EngineStats()
+        self._decode = jax.jit(make_decode_step(cfg, 0))
+        self._prefill = jax.jit(
+            lambda p, t: decoder_prefill_with_cache(p, cfg, t, n_slots))
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _fill_slot(self, i: int, req: Request):
+        P = self.prefill_len
+        prompt = np.asarray(req.prompt, np.int32)[:P]
+        if len(prompt) < P:
+            prompt = np.concatenate(
+                [prompt, np.full(P - len(prompt), prompt[-1], np.int32)])
+        tokens = jnp.asarray(prompt)[None, :]
+        logits, cache1 = self._prefill(self.params, tokens)
+        # graft the prefilled rows into slot i of the shared cache (rows
+        # beyond P arrive zeroed from the prefill pad)
+        k = self.cache.k.at[:, i].set(cache1.k[:, 0])
+        v = self.cache.v.at[:, i].set(cache1.v[:, 0])
+        # slot_pos is shared across the batch: take the union so slots that
+        # already decoded past P keep their rows visible. A slot refilled
+        # mid-stream attends zeroed K rows between P and the global position
+        # — a documented approximation; per-slot positions / paged KV would
+        # remove it (production follow-up).
+        self.cache = attn.KVCache(
+            k, v, jnp.maximum(self.cache.slot_pos, cache1.slot_pos))
+        self.slots[i] = req
+        self.pos[i] = P
+        self.cur[i] = int(jnp.argmax(logits[0]))
+        req.generated.append(int(self.cur[i]))
+        self.stats.tokens_out += 1      # the prefill emits the first token
+        self.stats.prefills += 1
+
+    def _retire(self, i: int):
+        req = self.slots[i]
+        req.done = True
+        self.stats.completed += 1
+        self.slots[i] = None
+
+    def step(self):
+        """One engine tick: refill free slots, then one decode step."""
+        for i in range(self.batch):
+            if self.slots[i] is None and self.queue:
+                self._fill_slot(i, self.queue.pop(0))
+        active = [i for i in range(self.batch) if self.slots[i] is not None]
+        if not active:
+            return False
+        # lockstep decode: positions differ per slot; cache layout uses the
+        # max position for slot_pos (causal mask handles shorter rows)
+        pos = int(self.pos.max())
+        tok = jnp.asarray(self.cur, jnp.int32)
+        nxt, self.cache = self._decode(self.params, tok, self.cache,
+                                       jnp.int32(pos))
+        self.stats.decode_steps += 1
+        nxt_np = np.asarray(nxt)
+        for i in active:
+            self.cur[i] = nxt_np[i]
+            self.pos[i] += 1
+            req = self.slots[i]
+            req.generated.append(int(nxt_np[i]))
+            self.stats.tokens_out += 1
+            hit_eos = self.eos_id is not None and int(nxt_np[i]) == self.eos_id
+            if len(req.generated) >= req.max_new or hit_eos or \
+                    self.pos[i] >= self.n_slots - 1:
+                self._retire(i)
+        return True
+
+    def run(self, max_ticks: int = 10_000) -> EngineStats:
+        for _ in range(max_ticks):
+            if not self.step() and not self.queue:
+                break
+        return self.stats

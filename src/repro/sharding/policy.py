@@ -1,0 +1,156 @@
+"""Parameter schema + logical-axis sharding policy.
+
+Every model module describes its parameters as a pytree of :class:`ParamDef`
+(shape + logical axes + init recipe).  The same schema drives three things:
+
+* ``init_params``  — materialize a pytree of arrays,
+* ``pspec_tree``   — the ``PartitionSpec`` tree for pjit in/out shardings,
+* ``abstract_params`` — ``ShapeDtypeStruct`` stand-ins for dry-run lowering.
+
+Logical axes (resolved per mesh):
+  ``dp``    batch / data parallel          -> ("pod","data") or ("data",)
+  ``fsdp``  fully-sharded param dim        -> ("data",)
+  ``tp``    tensor parallel dim            -> ("model",)
+  ``ep``    expert parallel dim            -> ("pod","model") or ("model",)
+  ``vocab`` vocabulary dim                 -> ("model",)
+  ``None``  replicated
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class ParamDef:
+    shape: tuple
+    axes: tuple                  # one logical-axis name (or None) per dim
+    init: str = "fan_in"         # fan_in|zeros|ones|embed|normal|mamba_A|dt_bias|small
+    scale: float = 1.0
+    dtype: Optional[str] = None  # override model dtype (e.g. fp32 for norms)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def stack(schema: Any, n: int) -> Any:
+    """Add a leading (scanned) layer dimension to every ParamDef in a tree."""
+    def add(d: ParamDef) -> ParamDef:
+        return ParamDef((n,) + tuple(d.shape), (None,) + tuple(d.axes),
+                        d.init, d.scale, d.dtype)
+    return jax.tree.map(add, schema, is_leaf=is_def)
+
+
+def _rules(mesh_axes: tuple) -> dict:
+    multi_pod = "pod" in mesh_axes
+    return {
+        "dp": ("pod", "data") if multi_pod else ("data",),
+        "fsdp": ("data",),
+        "tp": ("model",),
+        "ep": ("pod", "model") if multi_pod else ("model",),
+        "vocab": ("model",),
+        None: None,
+    }
+
+
+def resolve(axes: tuple, mesh_axes: tuple) -> P:
+    r = _rules(tuple(mesh_axes))
+    out = []
+    for a in axes:
+        v = r[a]
+        if v is None:
+            out.append(None)
+        elif len(v) == 1:
+            out.append(v[0])
+        else:
+            out.append(v)
+    return P(*out)
+
+
+def _divisible(shape, spec: P, mesh: Mesh) -> P:
+    """Drop sharding on dims the mesh does not divide evenly (e.g. smoke
+    configs on a 1-device mesh, or odd head counts)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    out = []
+    for dim, entry in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if entry is None:
+            out.append(None)
+            continue
+        names = entry if isinstance(entry, tuple) else (entry,)
+        total = int(np.prod([sizes.get(n, 1) for n in names]))
+        out.append(entry if total > 0 and dim % total == 0 else None)
+    return P(*out)
+
+
+def pspec_tree(schema: Any, mesh_axes: tuple) -> Any:
+    return jax.tree.map(lambda d: resolve(d.axes, mesh_axes), schema, is_leaf=is_def)
+
+
+def sharding_tree(schema: Any, mesh: Mesh) -> Any:
+    def mk(d: ParamDef):
+        spec = _divisible(d.shape, resolve(d.axes, mesh.axis_names), mesh)
+        return NamedSharding(mesh, spec)
+    return jax.tree.map(mk, schema, is_leaf=is_def)
+
+
+def batch_pspec(mesh_axes: tuple) -> Any:
+    """PartitionSpec entry for a global-batch dimension."""
+    r = _rules(tuple(mesh_axes))["dp"]
+    return r if len(r) > 1 else r[0]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_one(d: ParamDef, key, dtype) -> jax.Array:
+    dt = jnp.dtype(d.dtype) if d.dtype else dtype
+    shape = tuple(int(s) for s in d.shape)
+    if d.init == "zeros":
+        return jnp.zeros(shape, dt)
+    if d.init == "ones":
+        return jnp.ones(shape, dt)
+    if d.init == "fan_in":
+        fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+        return (jax.random.normal(key, shape) * d.scale / np.sqrt(fan_in)).astype(dt)
+    if d.init == "embed":
+        return (jax.random.normal(key, shape) * d.scale * 0.02).astype(dt)
+    if d.init == "normal":
+        return (jax.random.normal(key, shape) * d.scale).astype(dt)
+    if d.init == "mamba_A":   # A_log: log of Uniform(1, 16)
+        u = jax.random.uniform(key, shape, minval=1.0, maxval=16.0)
+        return jnp.log(u).astype(dt)
+    if d.init == "dt_bias":   # softplus^-1 of Uniform(1e-3, 1e-1)
+        u = jax.random.uniform(key, shape, minval=1e-3, maxval=1e-1)
+        return (u + jnp.log(-jnp.expm1(-u))).astype(dt)
+    if d.init == "small":
+        return (jax.random.normal(key, shape) * d.scale * 1e-2).astype(dt)
+    raise ValueError(f"unknown init {d.init}")
+
+
+def init_params(schema: Any, key, dtype=jnp.float32) -> Any:
+    leaves, treedef = jax.tree.flatten(schema, is_leaf=is_def)
+    keys = jax.random.split(key, max(len(leaves), 1))
+    arrs = [_init_one(d, k, jnp.dtype(dtype)) for d, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, arrs)
+
+
+def abstract_params(schema: Any, dtype=jnp.bfloat16) -> Any:
+    def mk(d: ParamDef):
+        dt = jnp.dtype(d.dtype) if d.dtype else jnp.dtype(dtype)
+        return jax.ShapeDtypeStruct(tuple(int(s) for s in d.shape), dt)
+    return jax.tree.map(mk, schema, is_leaf=is_def)
+
+
+def param_count(schema: Any) -> int:
+    leaves = jax.tree.leaves(schema, is_leaf=is_def)
+    return int(sum(np.prod(d.shape) for d in leaves))

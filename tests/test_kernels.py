@@ -1,0 +1,227 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracles
+(interpret=True executes the kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+from repro.kernels.distill_loss import fused_distill_rows
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ref import (flash_attention_ref, fused_distill_loss_ref,
+                               ssd_chunk_ref)
+
+
+@pytest.mark.parametrize("S,hd,bq,bk", [
+    (128, 64, 64, 64),
+    (256, 64, 128, 64),
+    (256, 128, 64, 128),
+    (512, 32, 128, 128),
+])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 128), (False, 0)])
+def test_flash_attention_sweep(S, hd, bq, bk, causal, window):
+    key = jax.random.PRNGKey(S + hd)
+    B, H = 1, 2
+    q, k, v = [jax.random.normal(kk, (B, H, S, hd))
+               for kk in jax.random.split(key, 3)]
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          block_q=bq, block_k=bk, interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    key = jax.random.PRNGKey(7)
+    B, H, S, hd = 2, 2, 128, 64
+    q, k, v = [jax.random.normal(kk, (B, H, S, hd)).astype(dtype)
+               for kk in jax.random.split(key, 3)]
+    out = flash_attention(q, k, v, causal=True, block_q=64, block_k=64,
+                          interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=True)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 3e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol, rtol=tol)
+
+
+def test_flash_attention_model_layout_wrapper():
+    key = jax.random.PRNGKey(3)
+    B, S, H, hd = 2, 128, 4, 32
+    q, k, v = [jax.random.normal(kk, (B, S, H, hd))
+               for kk in jax.random.split(key, 3)]
+    out = ops.flash_attention(q, k, v, causal=True)
+    ref = jnp.swapaxes(flash_attention_ref(
+        *(jnp.swapaxes(t, 1, 2) for t in (q, k, v)), causal=True), 1, 2)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+@pytest.mark.parametrize("B,D,M", [(64, 8, 32), (200, 23, 256), (300, 5, 128)])
+@pytest.mark.parametrize("kind", ["mse", "mae"])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_distill_sweep(B, D, M, kind, dtype):
+    key = jax.random.PRNGKey(B + M)
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (B, D)).astype(dtype)
+    xh = jax.random.normal(ks[1], (B, D)).astype(dtype)
+    z = jax.random.normal(ks[2], (B, M)).astype(dtype)
+    zt = jax.random.normal(ks[3], (B, M)).astype(dtype)
+    mask = (jax.random.uniform(ks[4], (B,)) > 0.4).astype(jnp.float32)
+    rows = fused_distill_rows(x, xh, z, zt, mask, lam=0.05, kind=kind,
+                              interpret=True)
+    got = jnp.mean(rows)
+    ref = fused_distill_loss_ref(x, xh, z, zt, mask, lam=0.05, kind=kind)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    assert abs(float(got) - float(ref)) < tol
+
+
+def test_fused_distill_unaligned_rows_ignore_teacher():
+    """Rows with mask=0 must be pure reconstruction loss (Eq. 5 case 2)."""
+    key = jax.random.PRNGKey(9)
+    ks = jax.random.split(key, 4)
+    B, D, M = 96, 10, 16
+    x = jax.random.normal(ks[0], (B, D))
+    xh = jax.random.normal(ks[1], (B, D))
+    z = jax.random.normal(ks[2], (B, M))
+    mask = jnp.zeros((B,))
+    a = ops.fused_distill_loss(x, xh, z, jnp.zeros_like(z), mask)
+    b = ops.fused_distill_loss(x, xh, z, 1e6 * jnp.ones_like(z), mask)
+    assert abs(float(a) - float(b)) < 1e-6
+
+
+def test_ssd_chunked_vs_sequential_ref():
+    """The chunked (matmul-form) SSD must equal the sequential recurrence."""
+    from repro.configs import get_smoke
+    from repro.models.mamba2 import ssd_chunked
+    cfg = get_smoke("zamba2-2.7b")
+    key = jax.random.PRNGKey(11)
+    ks = jax.random.split(key, 4)
+    B, S, H, P = 2, 64, cfg.ssm_heads, cfg.ssm_head_dim
+    G, N = cfg.ssm_groups, cfg.ssm_state
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.5)
+    Bm = jax.random.normal(ks[3], (B, S, G, N))
+    Cm = jax.random.normal(ks[0], (B, S, G, N))
+    y, _ = ssd_chunked(cfg, x, dt, A, Bm, Cm)   # multiplies x*dt internally
+    ref = ssd_chunk_ref(x, dt, A, Bm, Cm)       # dt*B*x in the recurrence
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                               atol=1e-3, rtol=1e-3)
+
+
+@pytest.mark.parametrize("Lc,N,P", [(32, 8, 16), (64, 16, 32), (128, 16, 64)])
+def test_ssd_intra_chunk_kernel(Lc, N, P):
+    """Pallas SSD intra-chunk kernel vs dense decay-matrix reference."""
+    from repro.kernels.ssd_chunk import ssd_intra_chunk
+    key = jax.random.PRNGKey(Lc + N)
+    ks = jax.random.split(key, 4)
+    G = 4
+    a = -jax.nn.softplus(jax.random.normal(ks[0], (G, Lc)))
+    B = jax.random.normal(ks[1], (G, Lc, N))
+    C = jax.random.normal(ks[2], (G, Lc, N))
+    x = jax.random.normal(ks[3], (G, Lc, P))
+    y, st = ssd_intra_chunk(a, B, C, x, interpret=True)
+    cs = jnp.cumsum(a, axis=1)
+    Lmat = jnp.where(np.tril(np.ones((Lc, Lc), bool)),
+                     jnp.exp(cs[:, :, None] - cs[:, None, :]), 0.0)
+    scores = jnp.einsum("gln,gsn->gls", C, B)
+    y_ref = jnp.einsum("gls,gsp->glp", scores * Lmat, x)
+    st_ref = jnp.einsum("gsn,gs,gsp->gnp", B,
+                        jnp.exp(cs[:, -1:] - cs), x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(st_ref),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_ssd_kernel_composes_full_scan():
+    """Kernel intra-chunk + host inter-chunk recurrence == sequential SSD."""
+    from repro.kernels.ssd_chunk import ssd_intra_chunk
+    key = jax.random.PRNGKey(5)
+    ks = jax.random.split(key, 5)
+    B_, S, H, P, N, Lc = 2, 64, 3, 16, 8, 16
+    Nc = S // Lc
+    x = jax.random.normal(ks[0], (B_, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B_, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B_, S, 1, N))
+    Cm = jax.random.normal(ks[4], (B_, S, 1, N))
+
+    ref = ssd_chunk_ref(x, dt, A, Bm, Cm)
+
+    # assemble via kernel: flatten (B, Nc, H) -> grid
+    ch = lambda t: t.reshape((B_, Nc, Lc) + t.shape[2:])
+    a = ch(dt * A)                                    # (B,Nc,Lc,H)
+    xdt = ch(x * dt[..., None])                       # (B,Nc,Lc,H,P)
+    Bh = jnp.repeat(ch(Bm), H, axis=3)
+    Ch = jnp.repeat(ch(Cm), H, axis=3)
+    g = lambda t: jnp.moveaxis(t, 3, 2).reshape((B_ * Nc * H,) + t.shape[2:3] + t.shape[4:]) \
+        if t.ndim == 5 else jnp.moveaxis(t, 3, 2).reshape(B_ * Nc * H, Lc)
+    y_i, st = ssd_intra_chunk(g(a), g(Bh), g(Ch), g(xdt), interpret=True)
+    y_i = jnp.moveaxis(y_i.reshape(B_, Nc, H, Lc, P), 2, 3)
+    st = st.reshape(B_, Nc, H, N, P)
+
+    cs = jnp.cumsum(a, axis=2)
+    chunk_decay = jnp.exp(cs[:, :, -1, :])            # (B,Nc,H)
+
+    def body(h, inp):
+        s, dec = inp
+        h_out = h
+        return h * dec[:, :, None, None] + s, h_out
+
+    _, h_prev = jax.lax.scan(body, jnp.zeros((B_, H, N, P)),
+                             (jnp.moveaxis(st, 1, 0),
+                              jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prev = jnp.moveaxis(h_prev, 0, 1)
+    y_x = jnp.einsum("bclhn,bchnp,bclh->bclhp", Ch, h_prev, jnp.exp(cs))
+    y = (y_i + y_x).reshape(B_, S, H, P)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                               atol=1e-3, rtol=1e-3)
+
+
+@pytest.mark.parametrize("W,hd,bw,window", [
+    (64, 32, 16, 0), (128, 64, 64, 0), (128, 64, 32, 48), (256, 128, 128, 0),
+])
+def test_decode_attention_kernel(W, hd, bw, window):
+    """One-token cache attention kernel vs masked softmax reference."""
+    from repro.kernels.decode_attention import decode_attention
+    key = jax.random.PRNGKey(W + hd)
+    ks = jax.random.split(key, 3)
+    BH = 4
+    q = jax.random.normal(ks[0], (BH, hd))
+    k = jax.random.normal(ks[1], (BH, W, hd))
+    v = jax.random.normal(ks[2], (BH, W, hd))
+    pos = jnp.int32(W * 3 // 4)
+    slot_pos = jnp.where(jnp.arange(W) <= int(pos), jnp.arange(W),
+                         -1).astype(jnp.int32)
+    out = decode_attention(q, k, v, slot_pos, pos, window=window,
+                           block_w=bw, interpret=True)
+    s = jnp.einsum("bd,bwd->bw", q, k) / np.sqrt(hd)
+    ok = (slot_pos >= 0) & (slot_pos <= pos)
+    if window:
+        ok &= slot_pos > pos - window
+    s = jnp.where(ok, s, -1e30)
+    ref = jnp.einsum("bw,bwd->bd", jax.nn.softmax(s, -1), v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_decode_attention_matches_model_decode_path():
+    """ops.decode_attention == models.attention.decode_attention softmax."""
+    from repro.kernels import ops as kops
+    from repro.models.attention import _gqa_expand
+    key = jax.random.PRNGKey(1)
+    ks = jax.random.split(key, 3)
+    B, H, K, W, hd = 2, 4, 2, 64, 32
+    q = jax.random.normal(ks[0], (B, H, hd))
+    kc = jax.random.normal(ks[1], (B, W, K, hd))
+    vc = jax.random.normal(ks[2], (B, W, K, hd))
+    pos = jnp.int32(50)
+    slot_pos = jnp.where(jnp.arange(W) <= 50, jnp.arange(W), -1).astype(jnp.int32)
+    ke = _gqa_expand(kc, H, K)
+    ve = _gqa_expand(vc, H, K)
+    out = kops.decode_attention(q, ke, ve, slot_pos, pos)
+    s = jnp.einsum("bhd,bwhd->bhw", q, ke) / np.sqrt(hd)
+    s = jnp.where((slot_pos >= 0) & (slot_pos <= pos), s, -1e30)
+    ref = jnp.einsum("bhw,bwhd->bhd", jax.nn.softmax(s, -1), ve)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)

@@ -1,0 +1,122 @@
+"""Focused unit tests for model-zoo building blocks."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.models import attention, mamba2, xlstm
+from repro.models.common import norm_apply, rope, schema_norm
+from repro.sharding.policy import init_params
+
+
+def test_rope_relative_property():
+    """RoPE inner products depend only on relative positions."""
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (1, 1, 1, 32))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, 32))
+    def dot_at(pq, pk):
+        qr = rope(q, jnp.full((1, 1), pq), 1e4)
+        kr = rope(k, jnp.full((1, 1), pk), 1e4)
+        return float(jnp.sum(qr * kr))
+    assert abs(dot_at(3, 7) - dot_at(13, 17)) < 1e-4   # same offset 4
+    assert abs(dot_at(0, 4) - dot_at(20, 24)) < 1e-4
+
+
+def test_gqa_expand_replicates_heads():
+    kv = jnp.arange(2 * 3 * 2 * 4, dtype=jnp.float32).reshape(2, 3, 2, 4)
+    out = attention._gqa_expand(kv, 6, 2)
+    assert out.shape == (2, 3, 6, 4)
+    for g in range(2):
+        for r in range(3):
+            np.testing.assert_array_equal(out[:, :, g * 3 + r], kv[:, :, g])
+
+
+def test_rmsnorm_scale_invariance_direction():
+    p = {"scale": jnp.ones((8,))}
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 8))
+    y1 = norm_apply(p, x)
+    y2 = norm_apply(p, 10.0 * x)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4)
+
+
+def test_sliding_window_attention_ignores_distant_past():
+    """With window w, perturbing tokens more than w back leaves the final
+    position's attention output unchanged."""
+    cfg = get_smoke("internlm2-20b").with_(sliding_window=8)
+    key = jax.random.PRNGKey(0)
+    p = init_params(attention.schema_attention(cfg), key, jnp.float32)
+    S, d = 32, cfg.d_model
+    x = jax.random.normal(key, (1, S, d))
+    positions = jnp.arange(S)[None]
+    out1 = attention.attention(p, cfg, x, positions=positions, window=8)
+    x2 = x.at[:, :S - 9].set(jax.random.normal(jax.random.PRNGKey(9),
+                                               (1, S - 9, d)))
+    out2 = attention.attention(p, cfg, x2, positions=positions, window=8)
+    np.testing.assert_allclose(np.asarray(out1[:, -1]),
+                               np.asarray(out2[:, -1]), atol=1e-4)
+
+
+def test_mamba_decode_matches_chunked_forward():
+    cfg = get_smoke("zamba2-2.7b")
+    key = jax.random.PRNGKey(2)
+    p = init_params(mamba2.schema_mamba_block(cfg), key, jnp.float32)
+    B, S = 2, 32
+    x = jax.random.normal(key, (B, S, cfg.d_model)) * 0.5
+    full = mamba2.mamba_block(p, cfg, x)
+    st = mamba2.init_state(cfg, B, jnp.float32)
+    outs = []
+    for t in range(S):
+        y, st = mamba2.mamba_decode(p, cfg, x[:, t:t + 1], st)
+        outs.append(y)
+    step = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(step), np.asarray(full),
+                               atol=5e-3, rtol=5e-3)
+
+
+def test_mlstm_decode_matches_chunked_forward():
+    cfg = get_smoke("xlstm-350m")
+    key = jax.random.PRNGKey(3)
+    p = init_params(xlstm.schema_mlstm(cfg), key, jnp.float32)
+    B, S = 2, 64
+    x = jax.random.normal(key, (B, S, cfg.d_model)) * 0.5
+    full = xlstm.mlstm_block(p, cfg, x)
+    st = xlstm.mlstm_init_state(cfg, B)
+    outs = []
+    for t in range(S):
+        y, st = xlstm.mlstm_decode(p, cfg, x[:, t:t + 1], st)
+        outs.append(y)
+    step = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(step), np.asarray(full),
+                               atol=5e-3, rtol=5e-3)
+
+
+def test_moe_capacity_drops_are_bounded():
+    """With capacity factor 1.0 and balanced-ish routing, most tokens are
+    served; with huge capacity, y is identical to a rerun (determinism)."""
+    from repro.models.ffn import moe, schema_moe
+    cfg = get_smoke("qwen3-moe-30b-a3b").with_(capacity_factor=8.0)
+    key = jax.random.PRNGKey(4)
+    p = init_params(schema_moe(cfg), key, jnp.float32)
+    x = jax.random.normal(key, (2, 16, cfg.d_model))
+    y1, _ = moe(p, cfg, x)
+    y2, _ = moe(p, cfg, x)
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+    # tokens served: output rows should be mostly nonzero
+    nz = np.mean(np.abs(np.asarray(y1)).sum(-1) > 1e-6)
+    assert nz > 0.95
+
+
+def test_decode_cache_slot_rolling():
+    """Sliding-window decode reuses slots: writing past W wraps around."""
+    cfg = get_smoke("internlm2-20b")
+    key = jax.random.PRNGKey(5)
+    p = init_params(attention.schema_attention(cfg), key, jnp.float32)
+    B, W = 1, 4
+    cache = attention.init_cache(cfg, B, W, jnp.float32)
+    for t in range(6):
+        x = jax.random.normal(jax.random.PRNGKey(t), (B, 1, cfg.d_model))
+        _, cache = attention.decode_attention(p, cfg, x, cache,
+                                              jnp.int32(t), window=W)
+    sp = np.asarray(cache.slot_pos)
+    assert set(sp.tolist()) == {4, 5, 2, 3}   # slots 0,1 overwritten

@@ -1,0 +1,85 @@
+"""Sharding policy unit tests: logical-axis resolution, divisibility
+fallback, cache auto-sharding, batch specs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config, get_smoke
+from repro.models import model as M
+from repro.sharding import policy
+from repro.sharding.policy import ParamDef
+
+
+def test_resolve_single_pod():
+    spec = policy.resolve(("fsdp", "tp"), ("data", "model"))
+    assert spec == P("data", "model")
+
+
+def test_resolve_multi_pod_dp_and_ep():
+    axes = ("pod", "data", "model")
+    assert policy.resolve(("dp", None), axes) == P(("pod", "data"), None)
+    assert policy.resolve(("ep", "fsdp", None), axes) == \
+        P(("pod", "model"), "data", None)
+
+
+def test_batch_pspec():
+    assert policy.batch_pspec(("data", "model")) == "data"
+    assert policy.batch_pspec(("pod", "data", "model")) == ("pod", "data")
+
+
+def test_divisible_fallback_on_tiny_mesh():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    tree = {"w": ParamDef((6, 10), ("fsdp", "tp"))}
+    sh = policy.sharding_tree(tree, mesh)
+    # mesh axes of size 1 always divide; spec survives
+    assert sh["w"].spec == P("data", "model")
+
+
+def test_stack_adds_layer_dim():
+    s = policy.stack({"w": ParamDef((4, 8), ("fsdp", "tp"))}, 12)
+    assert s["w"].shape == (12, 4, 8)
+    assert s["w"].axes == (None, "fsdp", "tp")
+
+
+def test_abstract_params_match_init_shapes():
+    cfg = get_smoke("yi-6b")
+    sch = M.schema(cfg)
+    abstract = policy.abstract_params(sch, jnp.float32)
+    real = policy.init_params(sch, jax.random.PRNGKey(0), jnp.float32)
+    za = jax.tree.leaves(abstract)
+    zr = jax.tree.leaves(real)
+    assert len(za) == len(zr)
+    for a, r in zip(za, zr):
+        assert a.shape == r.shape and a.dtype == r.dtype
+
+
+def test_full_config_schema_divisible_by_production_mesh():
+    """Every full-size param with tp/ep sharding must divide 16 (model) —
+    guards against configs that cannot lower on the production mesh."""
+    sizes = {"data": 16, "model": 16}
+    for arch in ["internlm2-20b", "kimi-k2-1t-a32b", "qwen3-moe-30b-a3b",
+                 "zamba2-2.7b", "nemotron-4-15b"]:
+        sch = M.schema(get_config(arch))
+        for d in jax.tree.leaves(sch, is_leaf=policy.is_def):
+            spec = policy.resolve(d.axes, ("data", "model"))
+            for dim, ent in zip(d.shape, tuple(spec)):
+                if ent is None:
+                    continue
+                names = ent if isinstance(ent, tuple) else (ent,)
+                total = int(np.prod([sizes[n] for n in names]))
+                assert dim % total == 0, (arch, d.shape, d.axes)
+
+
+def test_cache_pspecs_sharding_choices():
+    from repro.serve.decode import cache_pspecs
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        devices = np.empty((16, 16))
+    cache = {"k": jax.ShapeDtypeStruct((48, 128, 32768, 8, 128), jnp.bfloat16)}
+    specs = cache_pspecs(cache, FakeMesh(), batch=128)
+    # batch dim -> data; kv-heads (8) don't divide 16 -> slots dim -> model
+    assert specs["k"] == P(None, "data", "model", None, None)
