@@ -2,6 +2,7 @@
 #
 #   comm_footprint  -> paper Fig. 6 + Table 2 communication columns
 #   kernelbench     -> Pallas kernel oracle checks + CPU ref timings
+#   trainbench      -> scan training engine vs legacy per-batch loop
 #   roofline        -> EXPERIMENTS.md "Roofline" terms from dry-run artifacts
 #   accuracy        -> paper Fig. 5 (quick subset) + Table 2 metric columns
 #
@@ -17,7 +18,8 @@ def main() -> None:
     ap.add_argument("--skip-accuracy", action="store_true")
     args = ap.parse_args()
 
-    from benchmarks import accuracy, comm_footprint, kernelbench, roofline
+    from benchmarks import (accuracy, comm_footprint, kernelbench, roofline,
+                            trainbench)
 
     print("name,us_per_call,derived")
     for row in comm_footprint.rows():
@@ -30,6 +32,9 @@ def main() -> None:
     sys.stdout.flush()
 
     kernelbench.run(csv=False)
+    sys.stdout.flush()
+
+    trainbench.run(rows=2048, epochs=10)
     sys.stdout.flush()
 
     for r in roofline.run(csv=False, mesh_filter=""):

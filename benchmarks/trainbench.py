@@ -1,0 +1,71 @@
+"""Training-engine throughput: the device-resident scan engine
+(``training.train``) vs the legacy per-batch host loop
+(``training.train_legacy``) on the paper's g1-sized autoencoder workload
+(Table 3 g1_active: D -> 64 -> 128, symmetric decoder).
+
+Both engines run the identical model/optimizer/early-stopping math; the
+legacy loop pays a per-batch device upload + a ``float(loss)`` sync every
+step, the scan engine one dispatch + one sync per epoch.  Small batches are
+therefore overhead-dominated (where the speedup is largest); at batch 128 a
+CPU-only container is close to compute-bound and the gap narrows — on a real
+accelerator every row below is far past 5x.
+
+Run:  PYTHONPATH=src python benchmarks/trainbench.py [--rows 4096]
+      [--features 30] [--epochs 20] [--batches 32,64,128] [--csv]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.core import autoencoder as ae
+from repro.core import training
+
+
+def _steps_per_sec(train_fn, params, data, *, batch_size, epochs) -> float:
+    kw = dict(batch_size=batch_size, max_epochs=epochs, patience=epochs,
+              seed=0)
+    train_fn(params, data, ae.recon_loss, **dict(kw, max_epochs=2))  # warm
+    t0 = time.time()
+    r = train_fn(params, data, ae.recon_loss, **kw)
+    return r.steps_run / (time.time() - t0)
+
+
+def run(rows: int = 4096, features: int = 30, epochs: int = 20,
+        batch_sizes=(32, 64, 128), csv: bool = True) -> list:
+    x = np.random.RandomState(0).randn(rows, features).astype(np.float32)
+    params = ae.init_autoencoder(jax.random.PRNGKey(0),
+                                 ae.table3_encoder("g1_active", features))
+    rows_out = []
+    for bs in batch_sizes:
+        scan = _steps_per_sec(training.train, params, {"x": x},
+                              batch_size=bs, epochs=epochs)
+        legacy = _steps_per_sec(training.train_legacy, params, {"x": x},
+                                batch_size=bs, epochs=epochs)
+        rec = {"name": f"trainbench/g1/n{rows}/bs{bs}",
+               "scan_steps_per_s": scan, "legacy_steps_per_s": legacy,
+               "speedup": scan / legacy}
+        rows_out.append(rec)
+        if csv:
+            print(f"{rec['name']},{1e6 / scan:.0f},"
+                  f"scan={scan:.0f}sps|legacy={legacy:.0f}sps|"
+                  f"speedup={rec['speedup']:.1f}x", flush=True)
+    return rows_out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rows", type=int, default=4096)
+    ap.add_argument("--features", type=int, default=30)
+    ap.add_argument("--epochs", type=int, default=20)
+    ap.add_argument("--batches", default="32,64,128")
+    args = ap.parse_args()
+    run(rows=args.rows, features=args.features, epochs=args.epochs,
+        batch_sizes=[int(b) for b in args.batches.split(",") if b])
+
+
+if __name__ == "__main__":
+    main()

@@ -8,6 +8,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.optim.adam import paper_adam
+
 
 def init_logreg(key, n_features: int, n_classes: int) -> dict:
     return {"w": jnp.zeros((n_features, n_classes)),
@@ -28,26 +30,20 @@ def logreg_loss(params: dict, batch: dict) -> jax.Array:
 
 @partial(jax.jit, static_argnames=("n_classes", "steps", "lr"))
 def fit_logreg(x, y, n_classes: int, steps: int = 300, lr: float = 0.1):
-    """Full-batch Adam logistic regression (fast jit'd probe)."""
+    """Full-batch Adam logistic regression (fast jit'd probe), on the same
+    optimizer the training engine uses (repro.optim.adam)."""
     params = {"w": jnp.zeros((x.shape[1], n_classes)),
               "b": jnp.zeros((n_classes,))}
-    m = jax.tree.map(jnp.zeros_like, params)
-    v = jax.tree.map(jnp.zeros_like, params)
+    opt = paper_adam(lr)
 
-    def step(carry, t):
-        params, m, v = carry
+    def step(carry, _):
+        params, state = carry
         g = jax.grad(logreg_loss)(params, {"x": x, "y": y})
-        b1, b2, eps = 0.9, 0.999, 1e-8
-        m = jax.tree.map(lambda m_, g_: b1 * m_ + (1 - b1) * g_, m, g)
-        v = jax.tree.map(lambda v_, g_: b2 * v_ + (1 - b2) * g_ * g_, v, g)
-        tf = (t + 1).astype(jnp.float32)
-        params = jax.tree.map(
-            lambda p, m_, v_: p - lr * (m_ / (1 - 0.9 ** tf)) /
-            (jnp.sqrt(v_ / (1 - 0.999 ** tf)) + eps), params, m, v)
-        return (params, m, v), None
+        params, state, _ = opt.update(g, state, params)
+        return (params, state), None
 
-    (params, _, _), _ = jax.lax.scan(step, (params, m, v),
-                                     jnp.arange(steps))
+    (params, _), _ = jax.lax.scan(step, (params, opt.init(params)), None,
+                                  length=steps)
     return params
 
 

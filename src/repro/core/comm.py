@@ -18,7 +18,9 @@ class Channel:
         self.log.append((what, int(nbytes)))
 
     def send_array(self, what: str, arr):
-        self.send(what, arr.size * 4)   # paper: 4 bytes/element
+        # actual wire size of the array; the protocol sends float32 (4 B)
+        # everywhere, matching the paper's analytic formulas below
+        self.send(what, arr.size * arr.dtype.itemsize)
 
     @property
     def total_bytes(self) -> int:

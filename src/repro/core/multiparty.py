@@ -6,7 +6,12 @@ runs at every party; each passive sends its aligned-row latents to the
 active party (K-1 single exchanges — still ONE round per link, the paper's
 claim is per-pair); steps ②-④ run at the active party on the concat of all
 K latent blocks. Alignment is the row-intersection across ALL parties
-(pairwise PSI chained)."""
+(pairwise PSI chained).
+
+The K g1 stages run sequentially on the scan engine today; because they all
+share the ``recon_loss`` step, only per-party data shapes trigger new
+compilations (see ROADMAP: sharded multi-participant batching is the next
+step)."""
 from __future__ import annotations
 
 from dataclasses import dataclass, field

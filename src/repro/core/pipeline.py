@@ -9,6 +9,12 @@ Step 2  aligned representation learning (active, autoencoder g2 on
 Step 3  knowledge distillation          (active, student AE g3 on the FULL
         active dataset, Eq. 5 masked loss)
 Step 4  classifier on Z = g3(X_active), labels from the active party.
+
+All stages train on the device-resident scan engine (``core.training``):
+each stage uploads its arrays once and runs whole epochs as a single jitted
+scan; the g1/g2 stages share one compiled step (same ``recon_loss``
+identity) and every ``distill.make_loss`` closure with equal
+hyperparameters reuses the g3 engine via its semantic cache key.
 """
 from __future__ import annotations
 
@@ -184,6 +190,8 @@ def train_encoder_with_probe(x: np.ndarray, y: np.ndarray, n_classes: int,
     history = {"loss": [], "probe": []}
 
     def cb(epoch, p, tl, vl):
+        # per-epoch probe; ``p`` is device-resident and donated into the
+        # next epoch, so everything derived from it is computed here
         z = np.asarray(ae.encode(p, jnp.asarray(x)))
         m = clf.kfold_cv(z, y, n_classes, k=k, seed=seed)
         history["probe"].append(m[metric])

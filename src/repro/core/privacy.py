@@ -32,6 +32,8 @@ class InversionReport:
 
 
 def _inv_loss(params, batch):
+    # module-level: stable identity keys the training engine's jit cache,
+    # so every leakage_curve budget reuses one compiled step per shape
     x_hat = ae.mlp_apply(params, batch["z"], final_act=False)
     return jnp.mean(jnp.square(batch["x"] - x_hat))
 

@@ -5,6 +5,10 @@ is the g2 architecture + class layer (Appendix B "fair comparison").  Joint
 end-to-end training on the ALIGNED rows only; per-batch communication is
 one embedding upload (forward) + one gradient download (backward), with
 byte accounting exactly as Appendix E.2.
+
+Training runs on the device-resident scan engine (``core.training``); the
+per-batch communication pattern above is ACCOUNTED analytically (it is the
+protocol being simulated), not re-enacted step-by-step on the host.
 """
 from __future__ import annotations
 

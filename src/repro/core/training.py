@@ -1,6 +1,44 @@
-"""Shared mini-batch trainer for the tabular APC-VFL stack: Adam with the
-paper's settings (Kingma & Ba defaults), <=200 epochs, early stopping on a
-10% validation split with patience 10 (Appendix B)."""
+"""Device-resident mini-batch training engine for the tabular APC-VFL stack.
+
+Optimization is the paper's Adam (Kingma & Ba defaults, Appendix B) via
+:mod:`repro.optim.adam`, <=200 epochs, early stopping on a 10% validation
+split with patience 10.
+
+Data-layout contract (the scan engine)
+--------------------------------------
+``train`` takes ``data`` as a dict of equal-length, row-aligned host arrays.
+The engine:
+
+1. splits rows into train/val ONCE on the host (``np.random.RandomState(seed)``,
+   identical split to the legacy loop) and uploads both sides to device ONCE;
+2. draws each epoch's row permutation on device with ``jax.random``
+   (``fold_in(PRNGKey(seed), epoch)``);
+3. runs the WHOLE epoch as a single ``jax.lax.scan`` over
+   ``(n_batches, batch_size)`` index slices inside one jitted call, with the
+   params and optimizer buffers donated epoch-to-epoch;
+4. computes the validation loss inside the same jitted call, so exactly ONE
+   host sync per epoch (the two scalar losses) remains for early-stopping
+   bookkeeping.
+
+Batching semantics: ``batch_size`` is clamped to the train-split size and the
+epoch DROPS the remainder rows of the permutation (``n_batches = n_tr // bs``)
+so every scan step sees a static batch shape. The legacy loop instead ran a
+trailing partial batch when it had >= 2 rows; with divisible sizes the two
+engines take identical step counts (the parity test pins this).
+
+Caveats: ``epoch_callback(epoch, params, train_loss, val_loss)`` receives
+device params that are DONATED into the next epoch — use them synchronously
+or ``jax.tree.map(jnp.copy, ...)`` them; never stash the reference.
+
+Compilation caching: one jitted epoch function exists per
+``(loss identity, lr)`` — closures built by ``distill.make_loss`` carry a
+semantic ``cache_key`` attribute so repeated stages reuse the same compiled
+engine instead of re-tracing (see ``get_engine``).
+
+``train_legacy`` keeps the original per-batch host loop as a reference
+oracle for the parity test and ``benchmarks/trainbench.py``; it will be
+removed once the scan engine has soaked.
+"""
 from __future__ import annotations
 
 from dataclasses import dataclass
@@ -11,6 +49,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.optim.adam import paper_adam
+
 
 @dataclass
 class TrainResult:
@@ -20,6 +60,113 @@ class TrainResult:
     train_loss: list
     val_loss: list
 
+
+# ---------------------------------------------------------------------------
+# the scan engine
+# ---------------------------------------------------------------------------
+
+_ENGINE_CACHE: dict = {}
+_ENGINE_CACHE_MAX = 64   # FIFO-evict beyond this: entries strong-reference
+                         # the loss fn and its compiled executables
+
+
+def loss_cache_key(loss_fn):
+    """Semantic identity of a loss: closures tagged with ``cache_key``
+    (e.g. ``distill.make_loss``) share one compiled engine across instances;
+    plain module-level functions key on their own identity.  Untagged
+    per-call closures each get their own engine (a full re-trace per
+    ``train`` call) — tag them if they are built in a loop."""
+    return getattr(loss_fn, "cache_key", loss_fn)
+
+
+def _build_engine(loss_fn: Callable, lr: float):
+    opt = paper_adam(lr)
+
+    @partial(jax.jit, static_argnames=("n_batches", "batch_size"),
+             donate_argnums=(0, 1))
+    def run_epoch(params, opt_state, key, tr, val, *, n_batches, batch_size):
+        n_tr = jax.tree.leaves(tr)[0].shape[0]
+        perm = jax.random.permutation(key, n_tr)
+        idx = perm[: n_batches * batch_size].reshape(n_batches, batch_size)
+
+        def step(carry, bidx):
+            p, s = carry
+            batch = {k: v[bidx] for k, v in tr.items()}
+            loss, grads = jax.value_and_grad(loss_fn)(p, batch)
+            p, s, _ = opt.update(grads, s, p)
+            return (p, s), loss
+
+        (params, opt_state), losses = jax.lax.scan(step, (params, opt_state),
+                                                   idx)
+        return params, opt_state, jnp.mean(losses), loss_fn(params, val)
+
+    return run_epoch
+
+
+def get_engine(loss_fn: Callable, *, lr: float = 1e-3):
+    """Jitted epoch runner for ``loss_fn``, cached on (loss identity, lr)."""
+    key = (loss_cache_key(loss_fn), float(lr))
+    engine = _ENGINE_CACHE.get(key)
+    if engine is None:
+        while len(_ENGINE_CACHE) >= _ENGINE_CACHE_MAX:
+            _ENGINE_CACHE.pop(next(iter(_ENGINE_CACHE)))
+        engine = _build_engine(loss_fn, float(lr))
+        _ENGINE_CACHE[key] = engine
+    return engine
+
+
+def train(params, data: dict, loss_fn: Callable, *, batch_size: int = 128,
+          max_epochs: int = 200, patience: int = 10, lr: float = 1e-3,
+          val_frac: float = 0.1, seed: int = 0,
+          epoch_callback: Optional[Callable] = None) -> TrainResult:
+    """data: dict of equal-length arrays (row-aligned). loss_fn(params, batch).
+
+    See the module docstring for the device-residency / batching contract."""
+    n = len(next(iter(data.values())))
+    split = np.random.RandomState(seed).permutation(n)
+    n_val = max(int(n * val_frac), 1)
+    val_idx, tr_idx = split[:n_val], split[n_val:]
+    val = {k: jnp.asarray(np.asarray(v)[val_idx]) for k, v in data.items()}
+    tr = {k: jnp.asarray(np.asarray(v)[tr_idx]) for k, v in data.items()}
+    n_tr = len(tr_idx)
+    bs = max(min(batch_size, n_tr), 1)
+    n_batches = n_tr // bs
+
+    # fresh buffers: the engine donates its params/opt args, so the loop must
+    # own them (never the caller's arrays, never the best-so-far snapshot)
+    params = jax.tree.map(jnp.array, params)
+    best_params = jax.tree.map(jnp.copy, params)
+    engine = get_engine(loss_fn, lr=lr)
+    opt_state = paper_adam(lr).init(params)
+    base_key = jax.random.PRNGKey(seed)
+
+    best_val, since_best = np.inf, 0
+    tl_hist, vl_hist, steps, epochs = [], [], 0, 0
+    for epoch in range(max_epochs):
+        epochs = epoch + 1
+        params, opt_state, tl, vl = engine(
+            params, opt_state, jax.random.fold_in(base_key, epoch), tr, val,
+            n_batches=n_batches, batch_size=bs)
+        tl, vl = float(tl), float(vl)   # the single host sync of the epoch
+        steps += n_batches
+        tl_hist.append(tl)
+        vl_hist.append(vl)
+        if epoch_callback is not None:
+            epoch_callback(epoch, params, tl, vl)
+        if vl < best_val - 1e-6:
+            best_val, since_best = vl, 0
+            best_params = jax.tree.map(jnp.copy, params)
+        else:
+            since_best += 1
+            if since_best >= patience:
+                break
+    return TrainResult(best_params, epochs, steps, tl_hist, vl_hist)
+
+
+# ---------------------------------------------------------------------------
+# legacy per-batch host loop — reference oracle for the parity test and
+# benchmarks/trainbench.py only; new code should call ``train``
+# ---------------------------------------------------------------------------
 
 def _adam_init(params):
     z = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
@@ -49,11 +196,13 @@ def _adam_step(params, opt, batch, loss_fn, lr=1e-3):
     return params, {"m": m, "v": v, "t": t}, loss
 
 
-def train(params, data: dict, loss_fn: Callable, *, batch_size: int = 128,
-          max_epochs: int = 200, patience: int = 10, lr: float = 1e-3,
-          val_frac: float = 0.1, seed: int = 0,
-          epoch_callback: Optional[Callable] = None) -> TrainResult:
-    """data: dict of equal-length arrays (row-aligned). loss_fn(params, batch)."""
+def train_legacy(params, data: dict, loss_fn: Callable, *,
+                 batch_size: int = 128, max_epochs: int = 200,
+                 patience: int = 10, lr: float = 1e-3, val_frac: float = 0.1,
+                 seed: int = 0,
+                 epoch_callback: Optional[Callable] = None) -> TrainResult:
+    """Original host-side per-batch loop (re-uploads every mini-batch and
+    syncs ``float(loss)`` every step). Reference oracle — see module docs."""
     n = len(next(iter(data.values())))
     rng = np.random.RandomState(seed)
     perm = rng.permutation(n)

@@ -26,7 +26,8 @@ from repro.data.vertical import VFLScenario
 
 def _distill_loss(params: dict, batch: dict) -> jax.Array:
     """Huang et al. representation distillation: recon + MAE to the
-    federated representation on aligned rows."""
+    federated representation on aligned rows. Module-level on purpose: its
+    stable identity is the training engine's compilation-cache key."""
     x, z_t, mask = batch["x"], batch["z_teacher"], batch["aligned"]
     z = ae.encode(params, x)
     x_hat = ae.mlp_apply(params["dec"], z)

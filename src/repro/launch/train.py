@@ -43,15 +43,27 @@ def main():
     params, opt = fns.init(jax.random.PRNGKey(0))
     step_fn = jax.jit(fns.step)
 
+    def full_batch(tokens):
+        b = {"tokens": jnp.asarray(tokens)}
+        if cfg.family == "vlm":
+            b["image_embeds"] = jnp.zeros(
+                (args.batch, cfg.n_image_tokens, cfg.d_model), jnp.float32)
+        return b
+
+    from repro.train.loop import task_loss
+    eval_loss = jax.jit(lambda p, b: task_loss(p, cfg, b)[0])
+    # fixed held-out batch: "improved" compares the SAME data before/after,
+    # immune to batch-to-batch sampling noise of the Markov stream
+    eval_b = full_batch(next(batches(cfg.vocab_size, args.batch, args.seq,
+                                     1, seed=1234))["tokens"])
+    loss_before = float(eval_loss(params, eval_b))
+
     losses = []
     t0 = time.time()
     for i, batch in enumerate(batches(cfg.vocab_size, args.batch, args.seq,
                                       args.steps)):
-        b = {"tokens": jnp.asarray(batch["tokens"])}
-        if cfg.family == "vlm":
-            b["image_embeds"] = jnp.zeros(
-                (args.batch, cfg.n_image_tokens, cfg.d_model), jnp.float32)
-        params, opt, metrics = step_fn(params, opt, b)
+        params, opt, metrics = step_fn(params, opt,
+                                       full_batch(batch["tokens"]))
         losses.append(float(metrics["loss"]))
         if i % args.log_every == 0 or i == args.steps - 1:
             print(f"step {i:4d} loss {losses[-1]:.4f} "
@@ -59,12 +71,14 @@ def main():
                   f"gnorm {float(metrics['grad_norm']):.3f} "
                   f"({time.time()-t0:.1f}s)", flush=True)
 
+    loss_after = float(eval_loss(params, eval_b))
     if args.ckpt:
         ckpt.save(args.ckpt, {"params": params}, step=args.steps,
                   meta={"arch": args.arch, "loss": losses[-1]})
         print("saved", args.ckpt)
     print(json.dumps({"first_loss": losses[0], "last_loss": losses[-1],
-                      "improved": losses[-1] < losses[0]}))
+                      "eval_before": loss_before, "eval_after": loss_after,
+                      "improved": loss_after < loss_before}))
 
 
 if __name__ == "__main__":

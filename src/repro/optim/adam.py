@@ -1,5 +1,10 @@
 """AdamW on parameter pytrees. Optimizer state inherits param sharding
-(m/v are fp32 mirrors of each param leaf)."""
+(m/v are fp32 mirrors of each param leaf).
+
+This is the single Adam implementation in the repo: the LM training loop
+uses the LLM-flavoured defaults below (b2=0.95, grad clip 1.0), while the
+tabular APC-VFL stages use :func:`paper_adam` (Kingma & Ba defaults,
+paper Appendix B) through ``repro.core.training``."""
 from __future__ import annotations
 
 from typing import Any, NamedTuple
@@ -52,6 +57,13 @@ class AdamW(NamedTuple):
         new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
         new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
         return new_p, AdamState(step, new_m, new_v), gnorm
+
+
+def paper_adam(lr: float = 1e-3) -> AdamW:
+    """Adam with the APC-VFL paper's settings (Kingma & Ba defaults,
+    Appendix B): b2=0.999, no weight decay, no gradient clipping."""
+    return AdamW(lr=lr, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.0,
+                 grad_clip=0.0)
 
 
 def global_norm(tree) -> jax.Array:

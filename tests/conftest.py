@@ -1,0 +1,35 @@
+"""Tier-1 suite configuration.
+
+The default (quick) path must finish in minutes on a small CPU container:
+multi-minute end-to-end paths are marked ``@pytest.mark.slow`` and skipped
+unless ``--runslow`` is given, and tests that sweep training epochs take the
+``quick_epochs`` fixture so the quick path shrinks ``max_epochs``.
+"""
+import pytest
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--runslow", action="store_true", default=False,
+        help="run tests marked slow (full-epoch end-to-end paths)")
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: multi-minute end-to-end path; needs --runslow")
+
+
+def pytest_collection_modifyitems(config, items):
+    if config.getoption("--runslow"):
+        return
+    skip = pytest.mark.skip(reason="slow path: pass --runslow to run")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip)
+
+
+@pytest.fixture
+def quick_epochs(request) -> int:
+    """max_epochs budget for trained-to-convergence assertions: generous
+    under --runslow, small in the default quick path."""
+    return 60 if request.config.getoption("--runslow") else 12

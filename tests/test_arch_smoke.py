@@ -71,8 +71,16 @@ def test_decode_step(arch):
     assert not bool(jnp.isnan(logits).any())
 
 
-@pytest.mark.parametrize("arch", ["internlm2-20b", "zamba2-2.7b",
-                                  "qwen3-moe-30b-a3b", "xlstm-350m"])
+@pytest.mark.parametrize("arch", [
+    # one attention-family representative stays in the quick path; the other
+    # families run under --runslow (their decode parity is also pinned at the
+    # unit level: test_model_units mamba/mlstm decode-vs-chunked, and
+    # test_decode_step smokes every arch)
+    "internlm2-20b",
+    pytest.param("zamba2-2.7b", marks=pytest.mark.slow),
+    pytest.param("qwen3-moe-30b-a3b", marks=pytest.mark.slow),
+    pytest.param("xlstm-350m", marks=pytest.mark.slow),
+])
 def test_decode_matches_forward(arch):
     """Step-by-step decode reproduces the parallel forward logits."""
     cfg = get_smoke(arch)

@@ -2,6 +2,12 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="optional dev dependency (requirements-dev.txt); skip rather "
+           "than error the whole -x run")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import comm

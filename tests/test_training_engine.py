@@ -1,0 +1,158 @@
+"""Tests for the device-resident scan training engine: parity with the
+legacy per-batch loop, early stopping, epoch callbacks, compilation caching,
+and the comm wire-size fix that rides along."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import autoencoder as ae
+from repro.core import comm
+from repro.core import distill
+from repro.core import training
+
+
+def _toy(n=256, d=12, seed=0):
+    x = np.random.RandomState(seed).randn(n, d).astype(np.float32)
+    params = ae.init_autoencoder(jax.random.PRNGKey(seed), [d, 16, 8])
+    return params, {"x": x}
+
+
+def _max_leaf_diff(a, b):
+    return max(float(jnp.max(jnp.abs(x - y)))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+# ---------------------------------------------------------------------------
+# parity with the legacy loop (the reference oracle)
+# ---------------------------------------------------------------------------
+
+def test_parity_full_batch_exact():
+    """With one full batch per epoch the row order inside the batch cannot
+    matter, so scan engine and legacy loop must agree numerically: same
+    losses, same params, same epoch/step counts."""
+    params, data = _toy()
+    kw = dict(batch_size=10_000, max_epochs=8, patience=8, seed=3)
+    r_scan = training.train(params, data, ae.recon_loss, **kw)
+    r_leg = training.train_legacy(params, data, ae.recon_loss, **kw)
+    assert r_scan.epochs_run == r_leg.epochs_run
+    assert r_scan.steps_run == r_leg.steps_run == 8
+    np.testing.assert_allclose(r_scan.train_loss, r_leg.train_loss, atol=1e-5)
+    np.testing.assert_allclose(r_scan.val_loss, r_leg.val_loss, atol=1e-5)
+    assert _max_leaf_diff(r_scan.params, r_leg.params) < 1e-4
+
+
+def test_parity_minibatch_converges_alike():
+    """Mini-batch orders differ (device vs host RNG) so params are only
+    statistically equal: both engines must reach the same validation loss
+    neighbourhood with identical step accounting on divisible sizes."""
+    params, data = _toy(n=200, d=8, seed=1)
+    # n_tr = 180, divisible by 36 -> both engines run 5 steps/epoch
+    kw = dict(batch_size=36, max_epochs=12, patience=12, seed=1)
+    r_scan = training.train(params, data, ae.recon_loss, **kw)
+    r_leg = training.train_legacy(params, data, ae.recon_loss, **kw)
+    assert r_scan.steps_run == r_leg.steps_run == 12 * 5
+    assert abs(r_scan.val_loss[-1] - r_leg.val_loss[-1]) < 0.1 * max(
+        r_leg.val_loss[-1], 1e-3)
+
+
+def test_scan_drops_remainder_legacy_runs_it():
+    params, data = _toy(n=110, d=4)     # n_tr = 99, bs 32 -> 3 full + 3 rest
+    kw = dict(batch_size=32, max_epochs=2, patience=99, seed=0)
+    assert training.train(params, data, ae.recon_loss, **kw).steps_run == 6
+    assert training.train_legacy(params, data, ae.recon_loss,
+                                 **kw).steps_run == 8
+
+
+# ---------------------------------------------------------------------------
+# early stopping + histories
+# ---------------------------------------------------------------------------
+
+def test_early_stopping_on_plateau():
+    """lr=0 never improves after the first epoch's best, so training stops
+    after exactly patience further epochs."""
+    params, data = _toy(n=64, d=4)
+    r = training.train(params, data, ae.recon_loss, batch_size=16,
+                       max_epochs=50, patience=3, lr=0.0, seed=0)
+    assert r.epochs_run == 1 + 3
+    assert len(r.train_loss) == len(r.val_loss) == r.epochs_run
+    # with lr=0 params never move: best == initial
+    assert _max_leaf_diff(r.params, params) == 0.0
+
+
+def test_best_params_returned_not_last():
+    """The returned params are the best-val snapshot, immune to the
+    engine's buffer donation in later epochs."""
+    params, data = _toy(n=128, d=6, seed=2)
+    seen = []
+    r = training.train(params, data, ae.recon_loss, batch_size=32,
+                       max_epochs=8, patience=99, seed=2,
+                       epoch_callback=lambda e, p, tl, vl: seen.append(vl))
+    best_epoch = int(np.argmin(r.val_loss))
+    assert r.val_loss[best_epoch] == min(seen)
+    # snapshot buffers are alive and usable after training returned
+    assert np.isfinite(np.asarray(ae.encode(r.params,
+                                            jnp.asarray(data["x"][:4])))).all()
+
+
+def test_epoch_callback_invoked_per_epoch():
+    params, data = _toy(n=96, d=5)
+    calls = []
+
+    def cb(epoch, p, tl, vl):
+        # params must be usable synchronously (donated next epoch)
+        z = ae.encode(p, jnp.asarray(data["x"][:2]))
+        calls.append((epoch, float(jnp.sum(z)), tl, vl))
+
+    r = training.train(params, data, ae.recon_loss, batch_size=32,
+                       max_epochs=5, patience=99, seed=0, epoch_callback=cb)
+    assert [c[0] for c in calls] == list(range(r.epochs_run))
+    assert all(np.isfinite(c[1:]).all() for c in [np.asarray(c[1:])
+                                                  for c in calls])
+
+
+# ---------------------------------------------------------------------------
+# compilation caching: make_loss closures share one engine
+# ---------------------------------------------------------------------------
+
+def test_make_loss_closures_share_compiled_engine():
+    l1 = distill.make_loss(lam=0.07, kind="mae")
+    l2 = distill.make_loss(lam=0.07, kind="mae")
+    l3 = distill.make_loss(lam=0.08, kind="mae")
+    assert l1 is not l2
+    assert training.get_engine(l1) is training.get_engine(l2)
+    assert training.get_engine(l1) is not training.get_engine(l3)
+
+
+def test_no_recompilation_across_make_loss_instances():
+    """Two make_loss() closures with equal hyperparameters and equal data
+    shapes must hit the same jit cache entry (zero new compilations)."""
+    d, m = 6, 4
+    x = np.random.RandomState(0).randn(120, d).astype(np.float32)
+    data = {"x": x, "z_teacher": np.zeros((120, m), np.float32),
+            "aligned": np.ones((120,), np.float32)}
+    params = ae.init_autoencoder(jax.random.PRNGKey(0), [d, 8, m])
+    kw = dict(batch_size=32, max_epochs=2, patience=99, seed=0)
+
+    engine = training.get_engine(distill.make_loss(lam=0.11))
+    if not hasattr(engine, "_cache_size"):   # private jax API; guard it
+        pytest.skip("this jax version has no PjitFunction._cache_size")
+    training.train(params, data, distill.make_loss(lam=0.11), **kw)
+    misses = engine._cache_size()
+    assert misses >= 1
+    training.train(params, data, distill.make_loss(lam=0.11), **kw)
+    assert engine._cache_size() == misses   # no fresh compilation
+
+
+# ---------------------------------------------------------------------------
+# comm: wire size follows the dtype, analytic formulas stay float32
+# ---------------------------------------------------------------------------
+
+def test_send_array_uses_dtype_itemsize():
+    ch = comm.Channel()
+    ch.send_array("f32", np.zeros((10, 3), np.float32))
+    ch.send_array("f64", np.zeros((10, 3), np.float64))
+    ch.send_array("f16", jnp.zeros((8,), jnp.float16))
+    assert ch.log[0][1] == 30 * 4
+    assert ch.log[1][1] == 30 * 8
+    assert ch.log[2][1] == 8 * 2
