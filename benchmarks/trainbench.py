@@ -10,8 +10,16 @@ therefore overhead-dominated (where the speedup is largest); at batch 128 a
 CPU-only container is close to compute-bound and the gap narrows — on a real
 accelerator every row below is far past 5x.
 
+K-party mode (``--kparty``) benchmarks the batched multi-party engine
+(``training.train_many``: all K parties' g1 stages as ONE vmapped scan —
+one dispatch + one host sync per epoch total) against K sequential
+``training.train`` calls (K dispatch chains, K syncs per epoch), for
+K in {2, 4, 8} with uneven per-party feature widths (exercising the
+padded-stack layout).
+
 Run:  PYTHONPATH=src python benchmarks/trainbench.py [--rows 4096]
       [--features 30] [--epochs 20] [--batches 32,64,128] [--csv]
+      [--kparty] [--ks 2,4,8]
 """
 from __future__ import annotations
 
@@ -56,15 +64,75 @@ def run(rows: int = 4096, features: int = 30, epochs: int = 20,
     return rows_out
 
 
+def _kparty_specs(k: int, rows: int, features: int):
+    """K parties with uneven feature widths (features, features+1, ...)."""
+    specs = []
+    for i in range(k):
+        d = features + i
+        x = np.random.RandomState(i).randn(rows, d).astype(np.float32)
+        params = ae.init_autoencoder(jax.random.PRNGKey(i),
+                                     ae.table3_encoder("g1_passive", d))
+        specs.append(training.PartySpec(params, {"x": x}, seed=i))
+    return specs
+
+
+def run_kparty(rows: int = 2048, features: int = 24, epochs: int = 10,
+               batch_size: int = 32, ks=(2, 4, 8), csv: bool = True) -> list:
+    """train_many (one vmapped scan for all K parties) vs K sequential
+    training.train calls, total steps/s across parties."""
+    rows_out = []
+    for k in ks:
+        specs = _kparty_specs(k, rows, features)
+        kw = dict(batch_size=batch_size, max_epochs=epochs, patience=epochs)
+
+        def seq():
+            return [training.train(s.params, s.data, ae.recon_loss,
+                                   seed=s.seed, **kw) for s in specs]
+
+        def batched():
+            return training.train_many(specs, ae.masked_recon_loss, **kw)
+
+        for fn in (seq, batched):          # warm both compile caches
+            fn()
+        t0 = time.time()
+        r_seq = seq()
+        t_seq = time.time() - t0
+        t0 = time.time()
+        r_bat = batched()
+        t_bat = time.time() - t0
+        steps = sum(r.steps_run for r in r_seq)
+        assert steps == sum(r.steps_run for r in r_bat)
+        rec = {"name": f"trainbench/kparty/K{k}/n{rows}/bs{batch_size}",
+               "vmapped_steps_per_s": steps / t_bat,
+               "sequential_steps_per_s": steps / t_seq,
+               "speedup": t_seq / t_bat}
+        rows_out.append(rec)
+        if csv:
+            print(f"{rec['name']},{1e6 * t_bat / steps:.0f},"
+                  f"vmapped={rec['vmapped_steps_per_s']:.0f}sps|"
+                  f"sequential={rec['sequential_steps_per_s']:.0f}sps|"
+                  f"speedup={rec['speedup']:.1f}x", flush=True)
+    return rows_out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--rows", type=int, default=4096)
     ap.add_argument("--features", type=int, default=30)
     ap.add_argument("--epochs", type=int, default=20)
     ap.add_argument("--batches", default="32,64,128")
+    ap.add_argument("--kparty", action="store_true",
+                    help="run the K-party train_many vs sequential sweep")
+    ap.add_argument("--ks", default="2,4,8")
     args = ap.parse_args()
-    run(rows=args.rows, features=args.features, epochs=args.epochs,
-        batch_sizes=[int(b) for b in args.batches.split(",") if b])
+    if args.kparty:
+        run_kparty(rows=args.rows, features=args.features,
+                   epochs=args.epochs,
+                   batch_size=int(args.batches.split(",")[0]),
+                   ks=[int(k) for k in args.ks.split(",") if k])
+    else:
+        run(rows=args.rows, features=args.features, epochs=args.epochs,
+            batch_sizes=[int(b) for b in args.batches.split(",") if b])
 
 
 if __name__ == "__main__":

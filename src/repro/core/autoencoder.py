@@ -60,3 +60,14 @@ def reconstruct(params: dict, x: jax.Array) -> jax.Array:
 def recon_loss(params: dict, batch: dict) -> jax.Array:
     x = batch["x"]
     return jnp.mean(jnp.square(x - reconstruct(params, x)))
+
+
+def masked_recon_loss(params: dict, batch: dict) -> jax.Array:
+    """``recon_loss`` over the padded-stack batches of
+    ``training.train_many``: ``mask`` (D,) selects the party's real feature
+    columns, ``row_w`` (B,) its real rows.  With no padding this equals
+    ``recon_loss`` exactly (mean over real entries)."""
+    x, fm, rw = batch["x"], batch["mask"], batch["row_w"]
+    se = jnp.square(x - reconstruct(params, x)) * fm
+    per_row = jnp.sum(se, axis=-1) / jnp.maximum(jnp.sum(fm), 1.0)
+    return jnp.sum(per_row * rw) / jnp.maximum(jnp.sum(rw), 1.0)

@@ -5,13 +5,24 @@ One active participant (holds labels), K-1 passive participants. Step ①
 runs at every party; each passive sends its aligned-row latents to the
 active party (K-1 single exchanges — still ONE round per link, the paper's
 claim is per-pair); steps ②-④ run at the active party on the concat of all
-K latent blocks. Alignment is the row-intersection across ALL parties
-(pairwise PSI chained).
+K latent blocks.
 
-The K g1 stages run sequentially on the scan engine today; because they all
-share the ``recon_loss`` step, only per-party data shapes trigger new
-compilations (see ROADMAP: sharded multi-participant batching is the next
-step)."""
+Alignment is the row-intersection across ALL parties, computed as K-1
+genuine pairwise PSIs (active vs each passive) whose results are
+intersected locally at the active party.  Each link is charged for the
+active party's FULL hashed-ID upload — a real pairwise PSI cannot send the
+already-shrunk running intersection, which would both leak information
+about the other links and under-count bytes — so total PSI traffic is
+monotone in K.
+
+All K g1 stages (active + passives) train together through
+``training.train_many``: per-party params and datasets are zero-padded to
+common shapes, stacked along a leading party axis, and every epoch runs as
+ONE vmapped ``lax.scan`` inside a single jitted call — one upload, one
+compile, one host sync per epoch for all parties.  Parties that
+early-stop keep stepping on frozen params behind a per-party mask (the
+masked-select twin of ``distill.make_loss``), so the batch shape stays
+static; see the ``core.training`` module docstring for the layout."""
 from __future__ import annotations
 
 from dataclasses import dataclass, field
@@ -78,6 +89,30 @@ class APCVFLKResult:
     epochs: dict = field(default_factory=dict)
 
 
+def align_k(active_ids: np.ndarray, passive_ids: List[np.ndarray]):
+    """Multi-party alignment as K-1 genuine pairwise PSIs (active vs each
+    passive), intersected locally at the active party.  Each link is
+    charged for the active party's FULL hashed-ID upload — sending the
+    already-shrunk running intersection instead would both leak the other
+    links' results and under-count bytes.  Returns (common_ids sorted,
+    per-link channels)."""
+    if not passive_ids:          # degenerate: nothing to align against
+        common = np.unique(np.asarray(active_ids))   # sorted, per contract
+        if len(common) != len(active_ids):           # same policy as psi()
+            raise ValueError("PSI requires unique IDs: got "
+                             f"{len(active_ids)} ids, {len(common)} distinct")
+        return common, []
+    channels = [comm.Channel() for _ in passive_ids]
+    pair_commons = []
+    for ids, ch in zip(passive_ids, channels):
+        c, _, _ = psi(active_ids, ids, channel=ch)
+        pair_commons.append(c)
+    common = pair_commons[0]
+    for c in pair_commons[1:]:
+        common = np.intersect1d(common, c)
+    return common, channels
+
+
 def run_apcvfl_k(sc: VFLScenarioK, *, lam: float = 0.01, kind: str = "mse",
                  seed: int = 0, batch_size: int = 128,
                  max_epochs: int = 200) -> APCVFLKResult:
@@ -85,30 +120,32 @@ def run_apcvfl_k(sc: VFLScenarioK, *, lam: float = 0.01, kind: str = "mse",
     keys = jax.random.split(key, len(sc.passives) + 3)
     epochs = {}
 
-    # --- multi-party alignment: intersect row IDs across all parties ------
-    channels = [comm.Channel() for _ in sc.passives]
-    common = sc.active.ids
-    for p, ch in zip(sc.passives, channels):
-        common, _, _ = psi(common, p.ids, channel=ch)
+    common, channels = align_k(sc.active.ids, [p.ids for p in sc.passives])
     idx_a = _index_of(sc.active.ids, common)
     idx_ps = [_index_of(p.ids, common) for p in sc.passives]
 
-    # --- step 1 at every party ---------------------------------------------
+    # --- step 1 at every party: ONE batched vmapped run for all K g1s -----
     xa = sc.active.x
-    ra = training.train(
-        ae.init_autoencoder(keys[0], ae.table3_encoder("g1_active", xa.shape[1])),
-        {"x": xa}, ae.recon_loss, batch_size=batch_size,
-        max_epochs=max_epochs, seed=seed)
+    specs = [training.PartySpec(
+        ae.init_autoencoder(keys[0],
+                            ae.table3_encoder("g1_active", xa.shape[1])),
+        {"x": xa}, seed)]
+    for i, p in enumerate(sc.passives):
+        specs.append(training.PartySpec(
+            ae.init_autoencoder(keys[i + 1],
+                                ae.table3_encoder("g1_passive",
+                                                  p.x.shape[1])),
+            {"x": p.x}, seed + i + 1))
+    results = training.train_many(specs, ae.masked_recon_loss,
+                                  batch_size=batch_size,
+                                  max_epochs=max_epochs)
+    ra, r_ps = results[0], results[1:]
     epochs["g1_active"] = ra.epochs_run
     za = np.asarray(ae.encode(ra.params, jnp.asarray(xa[idx_a])))
 
     blocks = [za]
-    for i, (p, idx_p, ch) in enumerate(zip(sc.passives, idx_ps, channels)):
-        rp = training.train(
-            ae.init_autoencoder(keys[i + 1],
-                                ae.table3_encoder("g1_passive", p.x.shape[1])),
-            {"x": p.x}, ae.recon_loss, batch_size=batch_size,
-            max_epochs=max_epochs, seed=seed + i + 1)
+    for i, (p, idx_p, ch, rp) in enumerate(zip(sc.passives, idx_ps,
+                                               channels, r_ps)):
         epochs[f"g1_passive{i}"] = rp.epochs_run
         zp = np.asarray(ae.encode(rp.params, jnp.asarray(p.x[idx_p])))
         ch.send_array(f"step1/Z_passive{i}_aligned", zp)   # THE exchange

@@ -12,9 +12,12 @@ Step 4  classifier on Z = g3(X_active), labels from the active party.
 
 All stages train on the device-resident scan engine (``core.training``):
 each stage uploads its arrays once and runs whole epochs as a single jitted
-scan; the g1/g2 stages share one compiled step (same ``recon_loss``
-identity) and every ``distill.make_loss`` closure with equal
-hyperparameters reuses the g3 engine via its semantic cache key.
+scan, and every ``distill.make_loss`` closure with equal hyperparameters
+reuses the g3 engine via its semantic cache key.  The two step-1 (g1)
+autoencoders train TOGETHER through ``training.train_many`` — params and
+data zero-padded to common shapes, stacked on a leading party axis, every
+epoch one vmapped scan — the same batched engine ``core.multiparty`` uses
+for K parties (this is the K=2 special case).
 """
 from __future__ import annotations
 
@@ -67,12 +70,11 @@ def run_apcvfl(sc: VFLScenario, *, lam: float = 0.01, kind: str = "mse",
         wp = ae.table3_encoder("g1_passive", xp.shape[1])
         ae_a = ae.init_autoencoder(k1, wa)
         ae_p = ae.init_autoencoder(k2, wp)
-        ra = training.train(ae_a, {"x": xa}, ae.recon_loss,
-                            batch_size=batch_size, max_epochs=max_epochs,
-                            seed=seed)
-        rp = training.train(ae_p, {"x": xp}, ae.recon_loss,
-                            batch_size=batch_size, max_epochs=max_epochs,
-                            seed=seed + 1)
+        ra, rp = training.train_many(
+            [training.PartySpec(ae_a, {"x": xa}, seed),
+             training.PartySpec(ae_p, {"x": xp}, seed + 1)],
+            ae.masked_recon_loss, batch_size=batch_size,
+            max_epochs=max_epochs)
         epochs["g1_active"], epochs["g1_passive"] = ra.epochs_run, rp.epochs_run
 
         za_al = np.asarray(ae.encode(ra.params, jnp.asarray(xa[idx_a])))
@@ -145,11 +147,10 @@ def run_apcvfl_aligned_only(sc: VFLScenario, *, seed: int = 0,
 
     ae_a = ae.init_autoencoder(k1, ae.table3_encoder("g1_active", xa.shape[1]))
     ae_p = ae.init_autoencoder(k2, ae.table3_encoder("g1_passive", xp.shape[1]))
-    ra = training.train(ae_a, {"x": xa}, ae.recon_loss,
-                        batch_size=batch_size, max_epochs=max_epochs, seed=seed)
-    rp = training.train(ae_p, {"x": xp}, ae.recon_loss,
-                        batch_size=batch_size, max_epochs=max_epochs,
-                        seed=seed + 1)
+    ra, rp = training.train_many(
+        [training.PartySpec(ae_a, {"x": xa}, seed),
+         training.PartySpec(ae_p, {"x": xp}, seed + 1)],
+        ae.masked_recon_loss, batch_size=batch_size, max_epochs=max_epochs)
     za = np.asarray(ae.encode(ra.params, jnp.asarray(xa)))
     zp = np.asarray(ae.encode(rp.params, jnp.asarray(xp)))
     channel.send_array("step1/Z_passive_aligned", zp)

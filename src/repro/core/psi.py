@@ -12,8 +12,14 @@ import numpy as np
 
 
 def _hash_ids(ids: np.ndarray, salt: bytes) -> dict:
-    return {hashlib.sha256(salt + int(i).to_bytes(8, "little")).digest(): int(i)
-            for i in ids}
+    hashed = {hashlib.sha256(salt + int(i).to_bytes(8, "little")).digest():
+              int(i) for i in ids}
+    if len(hashed) != len(ids):
+        # a dict would silently keep one entry per duplicate, corrupting the
+        # idx_a/idx_b alignment downstream — fail loudly instead
+        raise ValueError(f"PSI requires unique IDs: got {len(ids)} ids, "
+                         f"{len(hashed)} distinct")
+    return hashed
 
 
 def psi(ids_a: np.ndarray, ids_b: np.ndarray, *, salt: bytes = b"psi",

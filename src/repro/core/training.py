@@ -26,14 +26,46 @@ so every scan step sees a static batch shape. The legacy loop instead ran a
 trailing partial batch when it had >= 2 rows; with divisible sizes the two
 engines take identical step counts (the parity test pins this).
 
-Caveats: ``epoch_callback(epoch, params, train_loss, val_loss)`` receives
-device params that are DONATED into the next epoch — use them synchronously
-or ``jax.tree.map(jnp.copy, ...)`` them; never stash the reference.
+``epoch_callback(epoch, params, train_loss, val_loss)`` receives a defensive
+copy of the params (the engine's own buffers are donated into the next
+epoch), so callbacks may stash them across epochs; the copy is only made
+when a callback is registered.
 
 Compilation caching: one jitted epoch function exists per
 ``(loss identity, lr)`` — closures built by ``distill.make_loss`` carry a
 semantic ``cache_key`` attribute so repeated stages reuse the same compiled
 engine instead of re-tracing (see ``get_engine``).
+
+Batched K-party training (``train_many``)
+-----------------------------------------
+``train_many`` runs K independent training problems (one per federated
+party) as ONE vmapped scan: one upload, one compile, one host sync per
+epoch for ALL parties.  The padded-stack layout:
+
+* every param leaf is zero-padded per-axis to the max shape across parties
+  and stacked along a leading party axis (zero rows/cols feed on zero
+  inputs and receive zero gradients, so each party's real sub-block evolves
+  exactly as it would unpadded);
+* every data array is zero-padded to the max row count / trailing width and
+  stacked likewise; the loss must consume the ``mask`` (real-feature
+  columns) and ``row_w`` (real-row weights) entries the engine adds to each
+  batch — see ``autoencoder.masked_recon_loss``;
+* each party keeps its own host-side train/val split, PRNG stream, Adam
+  state and step budget (``n_batches_i = n_tr_i // bs``); the shared scan
+  runs ``max_i n_batches_i`` steps and a per-party step mask freezes params
+  past a party's own budget;
+* early stopping is a per-party ``live`` mask (mirroring the masked-loss
+  trick in ``distill.make_loss``): converged parties keep stepping on
+  frozen params so the batch shape stays static, and the epoch loop ends
+  when every party has stopped.
+
+The shared batch size is clamped to the SMALLEST party's train split so
+every party runs at least one step per epoch.  For a party whose row count
+equals the padded maximum, the engine draws the IDENTICAL device
+permutation as ``train`` (same fold_in key); when additionally
+``batch_size <= min_i n_tr_i`` (no cross-party clamping), that party's
+results match the sequential path to float tolerance — the parity tests in
+``tests/test_train_many.py`` pin this.
 
 ``train_legacy`` keeps the original per-batch host loop as a reference
 oracle for the parity test and ``benchmarks/trainbench.py``; it will be
@@ -43,7 +75,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 from functools import partial
-from typing import Callable, Optional
+from typing import Callable, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -59,6 +91,17 @@ class TrainResult:
     steps_run: int
     train_loss: list
     val_loss: list
+
+
+@dataclass
+class PartySpec:
+    """One party's training problem for ``train_many``: unpadded init
+    params, unpadded row-aligned data dict, and the party's PRNG seed
+    (drives both the host train/val split and the device epoch perms,
+    exactly as the same seed would in ``train``)."""
+    params: dict
+    data: dict
+    seed: int = 0
 
 
 # ---------------------------------------------------------------------------
@@ -103,16 +146,25 @@ def _build_engine(loss_fn: Callable, lr: float):
     return run_epoch
 
 
-def get_engine(loss_fn: Callable, *, lr: float = 1e-3):
-    """Jitted epoch runner for ``loss_fn``, cached on (loss identity, lr)."""
-    key = (loss_cache_key(loss_fn), float(lr))
+def _cached_engine(tag: str, loss_fn: Callable, lr: float, builder):
+    key = (tag, loss_cache_key(loss_fn), float(lr))
     engine = _ENGINE_CACHE.get(key)
     if engine is None:
         while len(_ENGINE_CACHE) >= _ENGINE_CACHE_MAX:
             _ENGINE_CACHE.pop(next(iter(_ENGINE_CACHE)))
-        engine = _build_engine(loss_fn, float(lr))
+        engine = builder(loss_fn, float(lr))
         _ENGINE_CACHE[key] = engine
     return engine
+
+
+def get_engine(loss_fn: Callable, *, lr: float = 1e-3):
+    """Jitted epoch runner for ``loss_fn``, cached on (loss identity, lr)."""
+    return _cached_engine("train", loss_fn, lr, _build_engine)
+
+
+def get_many_engine(loss_fn: Callable, *, lr: float = 1e-3):
+    """Jitted vmapped K-party epoch runner, cached like ``get_engine``."""
+    return _cached_engine("train_many", loss_fn, lr, _build_many_engine)
 
 
 def train(params, data: dict, loss_fn: Callable, *, batch_size: int = 128,
@@ -152,7 +204,9 @@ def train(params, data: dict, loss_fn: Callable, *, batch_size: int = 128,
         tl_hist.append(tl)
         vl_hist.append(vl)
         if epoch_callback is not None:
-            epoch_callback(epoch, params, tl, vl)
+            # defensive copy: the engine donates ``params`` into the next
+            # epoch, so a stashed reference would be use-after-donate
+            epoch_callback(epoch, jax.tree.map(jnp.copy, params), tl, vl)
         if vl < best_val - 1e-6:
             best_val, since_best = vl, 0
             best_params = jax.tree.map(jnp.copy, params)
@@ -161,6 +215,180 @@ def train(params, data: dict, loss_fn: Callable, *, batch_size: int = 128,
             if since_best >= patience:
                 break
     return TrainResult(best_params, epochs, steps, tl_hist, vl_hist)
+
+
+# ---------------------------------------------------------------------------
+# batched K-party engine: all parties' epochs as ONE vmapped scan
+# ---------------------------------------------------------------------------
+
+def _pad_to(arr: np.ndarray, shape) -> np.ndarray:
+    arr = np.asarray(arr)
+    pads = [(0, t - s) for s, t in zip(arr.shape, shape)]
+    return np.pad(arr, pads) if any(p for _, p in pads) else arr
+
+
+def _pad_stack(trees):
+    """Zero-pad every leaf per-axis to the max shape across trees and stack
+    along a new leading party axis.  All trees must share one structure."""
+    treedef = jax.tree.structure(trees[0])
+    for t in trees[1:]:
+        if jax.tree.structure(t) != treedef:
+            raise ValueError("train_many: all parties must share one "
+                             "param/data tree structure")
+    leaves = [jax.tree.leaves(t) for t in trees]
+    stacked = []
+    for pos in zip(*leaves):
+        target = tuple(max(np.asarray(l).shape[d] for l in pos)
+                       for d in range(np.asarray(pos[0]).ndim))
+        stacked.append(jnp.asarray(np.stack([_pad_to(l, target)
+                                             for l in pos])))
+    return jax.tree.unflatten(treedef, stacked)
+
+
+def _build_many_engine(loss_fn: Callable, lr: float):
+    opt = paper_adam(lr)
+
+    @partial(jax.jit, static_argnames=("n_batches", "batch_size"),
+             donate_argnums=(0, 1))
+    def run_epoch_k(params, opt_state, keys, tr, val, n_tr, nb, live, *,
+                    n_batches, batch_size):
+        def one(p, s, key, tr_p, val_p, n_tr_p, nb_p, live_p):
+            n_max = tr_p["x"].shape[0]
+            perm = jax.random.permutation(key, n_max)
+            # stable-partition real rows (< n_tr_p) to the front: for an
+            # unpadded party this is exactly the solo engine's permutation,
+            # so the two paths draw identical mini-batches
+            order = perm[jnp.argsort(perm >= n_tr_p, stable=True)]
+            idx = order[: n_batches * batch_size].reshape(n_batches,
+                                                          batch_size)
+
+            def step(carry, xs):
+                p, s = carry
+                i, bidx = xs
+                batch = {k: v[bidx] for k, v in tr_p.items() if k != "mask"}
+                batch["mask"] = tr_p["mask"]
+                batch["row_w"] = jnp.ones((batch_size,), jnp.float32)
+                loss, grads = jax.value_and_grad(loss_fn)(p, batch)
+                p2, s2, _ = opt.update(grads, s, p)
+                # freeze past this party's own step budget or after its
+                # early stop — the masked-select twin of distill.make_loss
+                on = live_p & (i < nb_p)
+                sel = lambda a, b: jnp.where(on, a, b)
+                return ((jax.tree.map(sel, p2, p), jax.tree.map(sel, s2, s)),
+                        jnp.where(on, loss, 0.0))
+
+            (p, s), losses = jax.lax.scan(step, (p, s),
+                                          (jnp.arange(n_batches), idx))
+            tl = jnp.sum(losses) / jnp.maximum(nb_p, 1)
+            return p, s, tl, loss_fn(p, val_p)
+
+        return jax.vmap(one)(params, opt_state, keys, tr, val, n_tr, nb,
+                             live)
+
+    return run_epoch_k
+
+
+def train_many(specs: Sequence[PartySpec], loss_fn: Callable, *,
+               batch_size: int = 128, max_epochs: int = 200,
+               patience: int = 10, lr: float = 1e-3,
+               val_frac: float = 0.1) -> List[TrainResult]:
+    """Train K independent problems as one vmapped scan — one upload, one
+    compile, one host sync per epoch for all parties (module docstring:
+    padded-stack layout, per-party early-stop mask).
+
+    Every party's ``data`` must carry its feature array under the ``"x"``
+    key — the engine sizes rows and the real-feature ``mask`` from it; any
+    other row-aligned keys are padded too but only ``"x"`` is masked.
+    ``loss_fn`` must consume the ``mask`` (real-feature columns) and
+    ``row_w`` (real-row weights) entries the engine adds to every batch —
+    use ``autoencoder.masked_recon_loss`` for reconstruction workloads.
+    Returns one ``TrainResult`` per party with padding stripped from the
+    best-val params and histories truncated at that party's stop epoch."""
+    K = len(specs)
+    assert K >= 1
+    for sp in specs:
+        if "x" not in sp.data:
+            raise ValueError("train_many: every PartySpec.data needs an "
+                             "'x' feature array (sizes the rows and the "
+                             "real-feature mask)")
+
+    # --- host-side split per party, identical to ``train`` ----------------
+    tr_list, val_list, n_tr_l = [], [], []
+    for sp in specs:
+        n = len(next(iter(sp.data.values())))
+        split = np.random.RandomState(sp.seed).permutation(n)
+        n_val = max(int(n * val_frac), 1)
+        vi, ti = split[:n_val], split[n_val:]
+        val_list.append({k: np.asarray(v)[vi] for k, v in sp.data.items()})
+        tr_list.append({k: np.asarray(v)[ti] for k, v in sp.data.items()})
+        n_tr_l.append(len(ti))
+    n_tr = np.asarray(n_tr_l)
+    bs = max(min(batch_size, int(n_tr.min())), 1)
+    nb = n_tr // bs                       # per-party step budget per epoch
+    n_batches = int(nb.max())
+
+    for t, v in zip(tr_list, val_list):
+        t["mask"] = np.ones((t["x"].shape[1],), np.float32)
+        v["mask"] = t["mask"]
+        v["row_w"] = np.ones((v["x"].shape[0],), np.float32)
+
+    # --- padded-stack uploads: ONE device transfer per side ---------------
+    tr = _pad_stack(tr_list)
+    val = _pad_stack(val_list)
+    shapes = [[np.asarray(l).shape for l in jax.tree.leaves(sp.params)]
+              for sp in specs]
+    params = _pad_stack([sp.params for sp in specs])
+    best_params = jax.tree.map(jnp.copy, params)
+    opt_state = paper_adam(lr).init(params)
+    opt_state = opt_state._replace(step=jnp.zeros((K,), jnp.int32))
+    engine = get_many_engine(loss_fn, lr=lr)
+    base_keys = [jax.random.PRNGKey(sp.seed) for sp in specs]
+    nb_dev = jnp.asarray(nb, jnp.int32)
+    n_tr_dev = jnp.asarray(n_tr, jnp.int32)
+
+    best_val = np.full((K,), np.inf)
+    since = np.zeros((K,), np.int64)
+    live = np.ones((K,), bool)
+    epochs_run = np.zeros((K,), np.int64)
+    tl_hist = [[] for _ in range(K)]
+    vl_hist = [[] for _ in range(K)]
+
+    for epoch in range(max_epochs):
+        keys = jnp.stack([jax.random.fold_in(k, epoch) for k in base_keys])
+        params, opt_state, tl, vl = engine(
+            params, opt_state, keys, tr, val, n_tr_dev, nb_dev,
+            jnp.asarray(live), n_batches=n_batches, batch_size=bs)
+        tl = np.asarray(tl)
+        vl = np.asarray(vl)               # the single host sync of the epoch
+        epochs_run[live] += 1
+        for i in range(K):
+            if live[i]:
+                tl_hist[i].append(float(tl[i]))
+                vl_hist[i].append(float(vl[i]))
+        improved = live & (vl < best_val - 1e-6)
+        if improved.any():
+            sel = jnp.asarray(improved)
+            best_params = jax.tree.map(
+                lambda b, p: jnp.where(
+                    sel.reshape((K,) + (1,) * (p.ndim - 1)), p, b),
+                best_params, params)
+            best_val = np.where(improved, vl, best_val)
+        since = np.where(improved, 0, since + 1)
+        live = live & (since < patience)
+        if not live.any():
+            break
+
+    treedef = jax.tree.structure(specs[0].params)
+    leaves = jax.tree.leaves(best_params)
+    results = []
+    for i in range(K):
+        pl = [l[i][tuple(slice(0, s) for s in shp)]
+              for l, shp in zip(leaves, shapes[i])]
+        results.append(TrainResult(jax.tree.unflatten(treedef, pl),
+                                   int(epochs_run[i]),
+                                   int(epochs_run[i] * nb[i]),
+                                   tl_hist[i], vl_hist[i]))
+    return results
 
 
 # ---------------------------------------------------------------------------

@@ -37,6 +37,20 @@ def test_psi_counts_bytes():
     assert ch.total_bytes == (10 + 10) * 32
 
 
+def test_psi_rejects_duplicate_ids():
+    """The salted-hash table would silently collapse duplicates (dict
+    overwrite), corrupting idx_a/idx_b — a loud error is required."""
+    dup = np.array([1, 2, 2, 3], np.int64)
+    uniq = np.array([2, 3, 4], np.int64)
+    with pytest.raises(ValueError, match="unique IDs"):
+        psi(dup, uniq)
+    with pytest.raises(ValueError, match="unique IDs"):
+        psi(uniq, dup)
+    # unique inputs still fine
+    common, _, _ = psi(uniq, np.array([3, 4, 5], np.int64))
+    assert set(common.tolist()) == {3, 4}
+
+
 # ---------------------------------------------------------------------------
 # Eq. 5 loss
 # ---------------------------------------------------------------------------

@@ -26,6 +26,43 @@ def test_multiparty_k3_single_round_per_link():
         assert len(data) == 1          # one exchange per passive link
     assert r.z_dim == 256
     assert 0 <= r.metrics["accuracy"] <= 1
+    # every g1 stage trained (batched engine reports per-party epochs)
+    assert all(r.epochs[k] >= 1 for k in
+               ("g1_active", "g1_passive0", "g1_passive1"))
+
+
+def test_multiparty_psi_charges_full_active_upload():
+    """Each PSI link is a real pairwise PSI: the active party uploads its
+    FULL hashed ID set on every link, not the already-shrunk running
+    intersection (which leaked the other links' results and under-counted
+    bytes)."""
+    from repro.core.multiparty import align_k, make_scenario_k
+    ds = make_dataset("bcw", seed=3)
+    sc = make_scenario_k(ds, n_parties=4, n_active_features=5,
+                         n_aligned=100, seed=3)
+    common, channels = align_k(sc.active.ids, [p.ids for p in sc.passives])
+    for ch, p in zip(channels, sc.passives):
+        by_name = dict(ch.log)
+        assert by_name["psi/hashes_a"] == len(sc.active.ids) * 32
+        assert by_name["psi/hashes_b"] == len(p.ids) * 32
+    # alignment itself is the global intersection: common ids at every party
+    for p in sc.passives:
+        assert set(common.tolist()) <= set(p.ids.tolist())
+    assert set(common.tolist()) <= set(sc.active.ids.tolist())
+    assert len(common) == sc.n_aligned
+
+
+def test_multiparty_psi_bytes_monotone_in_k():
+    """More links -> strictly more PSI traffic under faithful accounting."""
+    from repro.core.multiparty import align_k, make_scenario_k
+    ds = make_dataset("bcw", seed=4)
+    totals = []
+    for k in (2, 3, 4):
+        sc = make_scenario_k(ds, n_parties=k, n_active_features=5,
+                             n_aligned=100, seed=4)
+        _, channels = align_k(sc.active.ids, [p.ids for p in sc.passives])
+        totals.append(sum(ch.total_bytes for ch in channels))
+    assert totals[0] < totals[1] < totals[2]
 
 
 def test_prefill_with_cache_matches_decode():

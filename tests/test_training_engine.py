@@ -95,6 +95,23 @@ def test_best_params_returned_not_last():
                                             jnp.asarray(data["x"][:4])))).all()
 
 
+def test_epoch_callback_params_survive_donation():
+    """Regression: callback params must be defensive copies — stashing them
+    across epochs and reading them after training used to hit the engine's
+    donated (deleted) buffers."""
+    params, data = _toy(n=96, d=5)
+    stashed = []
+    r = training.train(params, data, ae.recon_loss, batch_size=32,
+                       max_epochs=4, patience=99, seed=0,
+                       epoch_callback=lambda e, p, tl, vl: stashed.append(p))
+    assert len(stashed) == r.epochs_run
+    for p in stashed:   # every stashed snapshot still readable post-training
+        z = np.asarray(ae.encode(p, jnp.asarray(data["x"][:3])))
+        assert np.isfinite(z).all()
+    # snapshots are distinct per epoch, not one aliased buffer
+    assert _max_leaf_diff(stashed[0], stashed[-1]) > 0.0
+
+
 def test_epoch_callback_invoked_per_epoch():
     params, data = _toy(n=96, d=5)
     calls = []
