@@ -2,7 +2,7 @@
 #
 #   comm_footprint  -> paper Fig. 6 + Table 2 communication columns
 #   kernelbench     -> Pallas kernel oracle checks + CPU ref timings
-#   trainbench      -> scan training engine vs legacy per-batch loop
+#   trainbench      -> scan training engine / K-party vmapped throughput
 #   roofline        -> EXPERIMENTS.md "Roofline" terms from dry-run artifacts
 #   accuracy        -> paper Fig. 5 (quick subset) + Table 2 metric columns
 #

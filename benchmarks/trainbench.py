@@ -1,14 +1,12 @@
-"""Training-engine throughput: the device-resident scan engine
-(``training.train``) vs the legacy per-batch host loop
-(``training.train_legacy``) on the paper's g1-sized autoencoder workload
-(Table 3 g1_active: D -> 64 -> 128, symmetric decoder).
+"""Training-engine and experiment-harness throughput.
 
-Both engines run the identical model/optimizer/early-stopping math; the
-legacy loop pays a per-batch device upload + a ``float(loss)`` sync every
-step, the scan engine one dispatch + one sync per epoch.  Small batches are
-therefore overhead-dominated (where the speedup is largest); at batch 128 a
-CPU-only container is close to compute-bound and the gap narrows — on a real
-accelerator every row below is far past 5x.
+Default mode measures the device-resident scan engine
+(``training.train``) on the paper's g1-sized autoencoder workload
+(Table 3 g1_active: D -> 64 -> 128, symmetric decoder) across batch
+sizes.  The retired per-batch host loop measured 6.5x slower at bs=32
+and ~2.5x at bs=128 on a 2-core CPU container (PR 1); the engine's
+semantics are now pinned by the stored-trace oracle
+(``tests/data/train_trace.json``) instead of a live parity run.
 
 K-party mode (``--kparty``) benchmarks the batched multi-party engine
 (``training.train_many``: all K parties' g1 stages as ONE vmapped scan —
@@ -17,9 +15,14 @@ one dispatch + one host sync per epoch total) against K sequential
 K in {2, 4, 8} with uneven per-party feature widths (exercising the
 padded-stack layout).
 
+Sweep mode (``--sweep``) times the declarative experiment harness: the
+built-in smoke ``ExperimentSpec`` through ``repro.experiments.sweep`` —
+per-method wall time for the whole protocol (PSI + training + CV), i.e.
+the end-to-end cost one sweep cell pays per method.
+
 Run:  PYTHONPATH=src python benchmarks/trainbench.py [--rows 4096]
       [--features 30] [--epochs 20] [--batches 32,64,128] [--csv]
-      [--kparty] [--ks 2,4,8]
+      [--kparty] [--ks 2,4,8] [--sweep]
 """
 from __future__ import annotations
 
@@ -33,12 +36,13 @@ from repro.core import autoencoder as ae
 from repro.core import training
 
 
-def _steps_per_sec(train_fn, params, data, *, batch_size, epochs) -> float:
+def _steps_per_sec(params, data, *, batch_size, epochs) -> float:
     kw = dict(batch_size=batch_size, max_epochs=epochs, patience=epochs,
               seed=0)
-    train_fn(params, data, ae.recon_loss, **dict(kw, max_epochs=2))  # warm
+    training.train(params, data, ae.recon_loss,
+                   **dict(kw, max_epochs=2))                       # warm
     t0 = time.time()
-    r = train_fn(params, data, ae.recon_loss, **kw)
+    r = training.train(params, data, ae.recon_loss, **kw)
     return r.steps_run / (time.time() - t0)
 
 
@@ -49,18 +53,13 @@ def run(rows: int = 4096, features: int = 30, epochs: int = 20,
                                  ae.table3_encoder("g1_active", features))
     rows_out = []
     for bs in batch_sizes:
-        scan = _steps_per_sec(training.train, params, {"x": x},
-                              batch_size=bs, epochs=epochs)
-        legacy = _steps_per_sec(training.train_legacy, params, {"x": x},
-                                batch_size=bs, epochs=epochs)
+        scan = _steps_per_sec(params, {"x": x}, batch_size=bs, epochs=epochs)
         rec = {"name": f"trainbench/g1/n{rows}/bs{bs}",
-               "scan_steps_per_s": scan, "legacy_steps_per_s": legacy,
-               "speedup": scan / legacy}
+               "scan_steps_per_s": scan}
         rows_out.append(rec)
         if csv:
-            print(f"{rec['name']},{1e6 / scan:.0f},"
-                  f"scan={scan:.0f}sps|legacy={legacy:.0f}sps|"
-                  f"speedup={rec['speedup']:.1f}x", flush=True)
+            print(f"{rec['name']},{1e6 / scan:.0f},scan={scan:.0f}sps",
+                  flush=True)
     return rows_out
 
 
@@ -115,23 +114,66 @@ def run_kparty(rows: int = 2048, features: int = 24, epochs: int = 10,
     return rows_out
 
 
+def run_sweep(epochs: int = 5, csv: bool = True) -> list:
+    """Per-method wall time of one sweep cell on the built-in smoke spec
+    (whole protocol: PSI + all training stages + k-fold CV).  ``epochs``
+    caps every method's training budget; use a small value (<= 5) unless
+    you mean to benchmark near-converged runs.
+
+    The scenario is built ONCE outside the timed region (as in a real
+    sweep cell, where all methods share it), so each row measures only
+    the method's own protocol cost."""
+    from dataclasses import replace
+
+    from repro.experiments import build_scenario, get_method, sweep
+    from repro.launch.experiment import smoke_spec
+
+    spec = replace(smoke_spec(), overrides={"max_epochs": epochs})
+    sweep(spec)                   # validate + warm all compile caches
+    scenario = build_scenario(next(iter(spec.scenarios())))
+    seed = spec.seeds[0]
+    rows_out = []
+    for m in spec.methods:
+        mspec = replace(m, params={**spec.overrides, **m.params})
+        entry = get_method(m.method)
+        t0 = time.time()
+        result = entry.fn(scenario, mspec, seed=seed)
+        us = (time.time() - t0) * 1e6
+        rec = {"name": f"trainbench/sweep/{m.row_label}/e{epochs}",
+               "wall_s": us / 1e6, "accuracy": result.metrics["accuracy"]}
+        rows_out.append(rec)
+        if csv:
+            print(f"{rec['name']},{us:.0f},"
+                  f"wall={rec['wall_s']:.2f}s|acc={rec['accuracy']:.4f}",
+                  flush=True)
+    return rows_out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--rows", type=int, default=4096)
     ap.add_argument("--features", type=int, default=30)
-    ap.add_argument("--epochs", type=int, default=20)
+    ap.add_argument("--epochs", type=int, default=None,
+                    help="training budget (default: 20 for the engine "
+                         "modes, 5 for --sweep)")
     ap.add_argument("--batches", default="32,64,128")
     ap.add_argument("--kparty", action="store_true",
                     help="run the K-party train_many vs sequential sweep")
     ap.add_argument("--ks", default="2,4,8")
+    ap.add_argument("--sweep", action="store_true",
+                    help="time the declarative experiment harness "
+                         "(smoke spec, per-method wall time)")
     args = ap.parse_args()
-    if args.kparty:
+    if args.sweep:
+        run_sweep(epochs=args.epochs if args.epochs is not None else 5)
+    elif args.kparty:
         run_kparty(rows=args.rows, features=args.features,
-                   epochs=args.epochs,
+                   epochs=args.epochs if args.epochs is not None else 20,
                    batch_size=int(args.batches.split(",")[0]),
                    ks=[int(k) for k in args.ks.split(",") if k])
     else:
-        run(rows=args.rows, features=args.features, epochs=args.epochs,
+        run(rows=args.rows, features=args.features,
+            epochs=args.epochs if args.epochs is not None else 20,
             batch_sizes=[int(b) for b in args.batches.split(",") if b])
 
 

@@ -1,40 +1,48 @@
-"""Quickstart: the full APC-VFL protocol end-to-end on a synthetic
-Breast-Cancer-Wisconsin-shaped VFL scenario (2 participants, partial
-alignment). This is the paper's pipeline in ~20 lines of public API.
+"""Quickstart: the paper's headline comparison through the declarative
+experiment API — one ExperimentSpec, one sweep() call, uniform results.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 
-All four training stages run on the device-resident scan engine
-(repro.core.training): data uploaded once per stage, whole epochs as one
-jitted scan, one host sync per epoch.
+Every method trains on the device-resident scan engine
+(repro.core.training); the spec's empty params reproduce the paper's
+hyperparameters (configs.apcvfl_paper.TABULAR), here capped at 60 epochs
+so the example finishes in minutes on CPU.
 """
 import time
 
-from repro.core import pipeline
-from repro.data.synthetic import make_dataset
-from repro.data.vertical import make_scenario
+from repro.experiments import ExperimentSpec, MethodSpec, sweep
 
-# 1. a vertically-partitioned scenario: active holds 5 of 30 features +
-#    labels; 250 of ~570 records are aligned between the parties
-ds = make_dataset("bcw", seed=0)
-sc = make_scenario(ds, n_active_features=5, n_aligned=250, seed=0)
-print(f"active: {sc.active.x.shape}, passive: {sc.passive.x.shape}, "
-      f"aligned: {sc.n_aligned}")
+# 1. declare the experiment: a synthetic Breast-Cancer-Wisconsin-shaped
+#    VFL scenario (active holds 5 of 30 features + labels, 250 of ~570
+#    records aligned) and the methods to compare on it
+spec = ExperimentSpec(
+    name="quickstart",
+    dataset="bcw",
+    aligned=(250,),
+    n_active_features=5,
+    seeds=(0,),
+    methods=(MethodSpec("local"),            # raw-feature probe baseline
+             MethodSpec("apcvfl"),           # the paper's full protocol
+             MethodSpec("vfedtrans")),       # FedSVD-based prior work
+    overrides={"max_epochs": 60},
+)
 
-# 2. baselines: raw-feature local probe
-local = pipeline.run_local_baseline(sc)
-print(f"local probe accuracy:   {local['accuracy']:.3f}")
-
-# 3. APC-VFL: local representation learning -> ONE exchange ->
-#    joint representation -> distillation -> classifier
+# 2. run it: scenarios are built once per grid cell and shared by every
+#    method; each run returns the same uniform RunResult shape
 t0 = time.time()
-res = pipeline.run_apcvfl(sc, lam=0.01, kind="mse")
-print(f"APC-VFL accuracy:       {res.metrics['accuracy']:.3f} "
-      f"(trained in {time.time() - t0:.1f}s)")
-print(f"communication rounds:   {res.rounds} (SplitNN needs hundreds)")
-print(f"bytes exchanged:        {res.channel.total_bytes:,} "
-      f"({res.channel.total_mb():.2f} MB, incl. PSI hashes)")
-print(f"stage epochs:           {res.epochs}")
+results = sweep(spec)
+print(f"\n{len(results)} runs in {time.time() - t0:.1f}s")
+
+# 3. read the comparison straight off the records
+for r in results:
+    print(f"{r.method:>10}: accuracy={r.metrics['accuracy']:.3f} "
+          f"rounds={r.rounds} comm={r.comm['total_mb']:.2f}MB "
+          f"epochs={r.epochs}")
 
 # 4. the active participant can now run inference fully independently:
-#    z = g3(x_active) -> classifier, no collaborator required.
+#    z = g3(x_active) -> classifier, no collaborator required
+#    (the trained encoder is in the apcvfl result's params["g3"]).
+apcvfl = next(r for r in results if r.method == "apcvfl")
+print(f"\nAPC-VFL needed ONE communication round "
+      f"({apcvfl.comm['total_bytes']:,} bytes incl. PSI); "
+      f"g3 params ready for local inference: {sorted(apcvfl.params)}")

@@ -1,17 +1,17 @@
-"""Paper Figure 5/6 style sweep: APC-VFL vs Local vs Ablation vs VFedTrans
-across alignment levels (and SplitNN in the fully-aligned adaptation),
-with communication accounting.
+"""Paper Figure 5/6 style sweep through the declarative experiment API:
+APC-VFL vs Local vs Ablation vs VFedTrans across alignment levels (and
+SplitNN + the aligned-only adaptation with ``--splitnn``), with
+communication accounting — one ExperimentSpec, one sweep() call.
 
 Run:  PYTHONPATH=src python examples/vfl_scenarios.py [--dataset bcw]
-      [--alignments 250,150] [--features 5,2] [--max-epochs 60]
+      [--alignments 250,150] [--features 5] [--seeds 0] [--max-epochs 60]
+      [--splitnn] [--out results.json]
 """
 import argparse
 import json
-import time
 
-from repro.core import comm, pipeline, splitnn, vfedtrans
-from repro.data.synthetic import ALIGNED_SCENARIOS, PAPER_METRIC, make_dataset
-from repro.data.vertical import make_scenario
+from repro.data.synthetic import ALIGNED_SCENARIOS, PAPER_METRIC
+from repro.experiments import ExperimentSpec, MethodSpec, sweep, tidy
 
 
 def main():
@@ -19,56 +19,50 @@ def main():
     ap.add_argument("--dataset", default="bcw",
                     choices=["bcw", "mimic3", "credit"])
     ap.add_argument("--alignments", default="")
-    ap.add_argument("--features", default="5,2")
+    ap.add_argument("--features", type=int, default=5)
+    ap.add_argument("--seeds", default="0")
     ap.add_argument("--max-epochs", type=int, default=60)
-    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--splitnn", action="store_true",
+                    help="add the fully-aligned Table-2 comparison "
+                         "(SplitNN vs APC-VFL aligned-only)")
     ap.add_argument("--out", default="")
     args = ap.parse_args()
 
-    ds = make_dataset(args.dataset, seed=args.seed)
     metric = PAPER_METRIC[args.dataset]
-    aligns = ([int(x) for x in args.alignments.split(",") if x]
-              or ALIGNED_SCENARIOS[args.dataset][-2:])
-    feats = [int(x) for x in args.features.split(",") if x]
+    aligns = tuple(int(x) for x in args.alignments.split(",") if x) \
+        or tuple(ALIGNED_SCENARIOS[args.dataset][-2:])
+    methods = [MethodSpec("local"),
+               MethodSpec("apcvfl"),
+               MethodSpec("apcvfl", label="ablation",
+                          params={"ablation": True}),
+               MethodSpec("vfedtrans")]
+    if args.splitnn:
+        test_size = 50 if args.dataset == "bcw" else 500
+        methods += [MethodSpec("splitnn", params={"test_size": test_size}),
+                    MethodSpec("apcvfl_aligned_only",
+                               params={"test_size": test_size})]
 
-    rows = []
-    for n_al in aligns:
-        for a in feats:
-            sc = make_scenario(ds, n_active_features=a, n_aligned=n_al,
-                               seed=args.seed)
-            t0 = time.time()
-            loc = pipeline.run_local_baseline(sc, seed=args.seed)
-            ab = pipeline.run_apcvfl(sc, ablation=True,
-                                     max_epochs=args.max_epochs)
-            ap_ = pipeline.run_apcvfl(sc, max_epochs=args.max_epochs)
-            vt = vfedtrans.run_vfedtrans(sc, max_epochs=args.max_epochs)
-            row = {
-                "aligned": n_al, "active_features": a,
-                "local": loc[metric],
-                "ablation": ab.metrics[metric],
-                "apcvfl": ap_.metrics[metric],
-                "vfedtrans": vt.metrics[metric],
-                "apcvfl_MB": ap_.channel.total_mb(),
-                "vfedtrans_MB": vt.channel.total_mb(),
-                "apcvfl_rounds": ap_.rounds,
-                "vfedtrans_rounds": vt.rounds,
-                "secs": round(time.time() - t0, 1),
-            }
-            rows.append(row)
-            print(json.dumps(row), flush=True)
+    spec = ExperimentSpec(
+        name=f"fig5/{args.dataset}",
+        dataset=args.dataset,
+        aligned=aligns,
+        n_active_features=args.features,
+        seeds=tuple(int(s) for s in args.seeds.split(",") if s),
+        methods=tuple(methods),
+        overrides={"max_epochs": args.max_epochs},
+    )
+    records = tidy(sweep(spec, progress=print))
 
-    print("\n=== summary (metric: %s) ===" % metric)
-    hdr = ("aligned", "a", "local", "ablation", "apcvfl", "vfedtrans",
-           "apcvfl_MB", "vfedtrans_MB")
+    print(f"\n=== {spec.name} summary (metric: {metric}) ===")
+    hdr = ("aligned", "seed", "method", metric, "rounds", "MB")
     print(" ".join(f"{h:>12}" for h in hdr))
-    for r in rows:
-        print(f"{r['aligned']:>12} {r['active_features']:>12} "
-              f"{r['local']:>12.4f} {r['ablation']:>12.4f} "
-              f"{r['apcvfl']:>12.4f} {r['vfedtrans']:>12.4f} "
-              f"{r['apcvfl_MB']:>12.3f} {r['vfedtrans_MB']:>12.3f}")
+    for r in records:
+        print(f"{r['n_aligned']:>12} {r['seed']:>12} {r['method']:>12} "
+              f"{r[metric]:>12.4f} {r['rounds']:>12} {r['comm_mb']:>12.3f}")
     if args.out:
         with open(args.out, "w") as fh:
-            json.dump(rows, fh, indent=1)
+            json.dump({"spec": spec.to_dict(), "records": records}, fh,
+                      indent=1)
 
 
 if __name__ == "__main__":

@@ -1,8 +1,32 @@
 """The paper's own model family: symmetric MLP autoencoders (Table 3) +
 logistic-regression probe. This config names the *scaled* variant used when
 an assigned backbone acts as the student encoder g3; the faithful tabular
-reproduction lives in repro.core (architectures straight from Table 3)."""
+reproduction lives in repro.core (architectures straight from Table 3).
+
+``TABULAR`` is the single source of the paper's tabular-protocol
+hyperparameters (Appendix B): every ``run_*`` entry point in
+``repro.core`` defaults its kwargs from here, and ``MethodSpec.params``
+overrides flow through the same kwargs — so a spec with no params
+reproduces the paper's settings exactly.
+"""
+from dataclasses import dataclass
+
 from repro.configs.base import ModelConfig
+
+
+@dataclass(frozen=True)
+class TabularHparams:
+    """Paper Appendix B defaults for the tabular APC-VFL stack."""
+    batch_size: int = 128
+    max_epochs: int = 200       # <=200 epochs ...
+    patience: int = 10          # ... with early stopping, patience 10
+    lr: float = 1e-3            # Adam, Kingma & Ba defaults
+    lam: float = 0.01           # Eq. 5 distillation weight
+    kind: str = "mse"           # distillation distance
+    test_size: int = 500        # held-out rows in the SplitNN comparison
+
+
+TABULAR = TabularHparams()
 
 
 def config() -> ModelConfig:

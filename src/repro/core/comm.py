@@ -1,30 +1,56 @@
 """Communication accounting: a simulated peer-to-peer channel that records
 every transfer, plus the paper's analytic footprint formulas (Appendix E).
 
+Every transfer carries a *direction* and a *stage* so a channel can report
+per-direction (uplink/downlink) and per-stage byte totals.  The direction
+convention follows federated-learning usage: ``uplink`` flows toward the
+aggregating side (the active participant, or the trusted server in
+FedSVD), ``downlink`` flows away from it.  ``Channel.summary()`` returns a
+JSON-ready dict of the measured totals; ``summarize`` aggregates several
+per-link channels (the K-party case) into one such dict.
+
 All analytic formulas assume 4-byte floats, as in the paper.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
 from math import ceil
+from typing import Iterable, List, NamedTuple
+
+UPLINK = "uplink"        # toward the active participant / server
+DOWNLINK = "downlink"    # away from the active participant / server
+
+
+class Transfer(NamedTuple):
+    what: str
+    nbytes: int
+    direction: str
+    stage: str
 
 
 @dataclass
 class Channel:
     """Byte- and round-accounting for a logical link between two parties."""
-    log: list = field(default_factory=list)
+    log: List[Transfer] = field(default_factory=list)
 
-    def send(self, what: str, nbytes: int):
-        self.log.append((what, int(nbytes)))
+    def send(self, what: str, nbytes: int, *, direction: str = UPLINK,
+             stage: str | None = None):
+        """Record one transfer.  ``stage`` defaults to the prefix of
+        ``what`` before the first ``/`` (e.g. ``"step1/Z"`` -> ``step1``)."""
+        if stage is None:
+            stage = what.split("/", 1)[0]
+        self.log.append(Transfer(what, int(nbytes), direction, stage))
 
-    def send_array(self, what: str, arr):
+    def send_array(self, what: str, arr, *, direction: str = UPLINK,
+                   stage: str | None = None):
         # actual wire size of the array; the protocol sends float32 (4 B)
         # everywhere, matching the paper's analytic formulas below
-        self.send(what, arr.size * arr.dtype.itemsize)
+        self.send(what, arr.size * arr.dtype.itemsize, direction=direction,
+                  stage=stage)
 
     @property
     def total_bytes(self) -> int:
-        return sum(b for _, b in self.log)
+        return sum(t.nbytes for t in self.log)
 
     @property
     def rounds(self) -> int:
@@ -32,6 +58,39 @@ class Channel:
 
     def total_mb(self) -> float:
         return self.total_bytes / 1e6
+
+    def bytes_by_direction(self) -> dict:
+        out = {UPLINK: 0, DOWNLINK: 0}
+        for t in self.log:
+            out[t.direction] = out.get(t.direction, 0) + t.nbytes
+        return out
+
+    def bytes_by_stage(self) -> dict:
+        out: dict = {}
+        for t in self.log:
+            out[t.stage] = out.get(t.stage, 0) + t.nbytes
+        return out
+
+    def summary(self) -> dict:
+        """JSON-ready measured totals for this link."""
+        by_dir = self.bytes_by_direction()
+        return {
+            "total_bytes": self.total_bytes,
+            "total_mb": self.total_mb(),
+            "transfers": self.rounds,
+            "uplink_bytes": by_dir.get(UPLINK, 0),
+            "downlink_bytes": by_dir.get(DOWNLINK, 0),
+            "by_stage": self.bytes_by_stage(),
+        }
+
+
+def summarize(channels: Iterable[Channel]) -> dict:
+    """Aggregate several per-link channels into one ``summary()``-shaped
+    dict (bytes and transfer counts sum; stages merge)."""
+    total = Channel()
+    for ch in channels:
+        total.log.extend(ch.log)
+    return total.summary()
 
 
 # --- Appendix E.1: APC-VFL -------------------------------------------------

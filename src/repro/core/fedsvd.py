@@ -58,8 +58,10 @@ def fedsvd(x_active: np.ndarray, x_passive: np.ndarray, *, seed: int = 0,
     # trusted key generator
     permA, signA = _signed_perm(n, rng)
     permB, signB = _signed_perm(x_tot, rng)
-    channel.send("keygen->active: A,B_t", (n * n + x_t * x_tot) * 4)
-    channel.send("keygen->passive: A,B_d", (n * n + x_d * x_tot) * 4)
+    channel.send("fedsvd/keygen->active: A,B_t", (n * n + x_t * x_tot) * 4,
+                 direction="downlink")
+    channel.send("fedsvd/keygen->passive: A,B_d", (n * n + x_d * x_tot) * 4,
+                 direction="downlink")
 
     # masked uploads: S~_k = A X_k B_k   (B_k = rows of B for party k's cols)
     def mask_party(Xk, col_offset, ncols):
@@ -73,12 +75,15 @@ def fedsvd(x_active: np.ndarray, x_passive: np.ndarray, *, seed: int = 0,
 
     St = mask_party(x_active, 0, x_t)
     Sd = mask_party(x_passive, x_t, x_d)
-    channel.send("active->server: S~_t", n * x_t * 4)
-    channel.send("passive->server: S~_d", n * x_d * 4)
+    channel.send("fedsvd/active->server: S~_t", n * x_t * 4,
+                 direction="uplink")
+    channel.send("fedsvd/passive->server: S~_d", n * x_d * 4,
+                 direction="uplink")
 
     Xp = St + Sd
     Up, S, _ = np.linalg.svd(Xp, full_matrices=False)
-    channel.send("server->active: U~", n * x_tot * 4)
+    channel.send("fedsvd/server->active: U~", n * x_tot * 4,
+                 direction="downlink")
 
     U = _apply_AT(permA, signA, Up)
     return FedSVDResult(U.astype(np.float32), S.astype(np.float32),

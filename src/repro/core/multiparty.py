@@ -22,16 +22,22 @@ ONE vmapped ``lax.scan`` inside a single jitted call — one upload, one
 compile, one host sync per epoch for all parties.  Parties that
 early-stop keep stepping on frozen params behind a per-party mask (the
 masked-select twin of ``distill.make_loss``), so the batch shape stays
-static; see the ``core.training`` module docstring for the layout."""
+static; see the ``core.training`` module docstring for the layout.
+
+Hyperparameter defaults come from ``configs.apcvfl_paper.TABULAR``;
+``run_apcvfl_k`` returns the unified ``experiments.results.RunResult``
+whose ``channels`` tuple holds one measured ``comm.Channel`` per passive
+link (``rounds`` is the paper's per-link claim: ONE data exchange)."""
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import List
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.configs.apcvfl_paper import TABULAR as HP
 from repro.core import autoencoder as ae
 from repro.core import classifier as clf
 from repro.core import comm
@@ -40,6 +46,7 @@ from repro.core import training
 from repro.core.psi import psi
 from repro.data.synthetic import TabularDataset
 from repro.data.vertical import ParticipantData
+from repro.experiments.results import RunResult
 
 
 @dataclass
@@ -80,15 +87,6 @@ def make_scenario_k(ds: TabularDataset, *, n_parties: int,
     return VFLScenarioK(ds.name, active, passives, n_aligned, ds.n_classes)
 
 
-@dataclass
-class APCVFLKResult:
-    metrics: dict
-    channels: List[comm.Channel]
-    rounds_per_link: int
-    z_dim: int
-    epochs: dict = field(default_factory=dict)
-
-
 def align_k(active_ids: np.ndarray, passive_ids: List[np.ndarray]):
     """Multi-party alignment as K-1 genuine pairwise PSIs (active vs each
     passive), intersected locally at the active party.  Each link is
@@ -113,69 +111,86 @@ def align_k(active_ids: np.ndarray, passive_ids: List[np.ndarray]):
     return common, channels
 
 
-def run_apcvfl_k(sc: VFLScenarioK, *, lam: float = 0.01, kind: str = "mse",
-                 seed: int = 0, batch_size: int = 128,
-                 max_epochs: int = 200) -> APCVFLKResult:
+def run_apcvfl_k(sc: VFLScenarioK, *, lam: float = HP.lam,
+                 kind: str = HP.kind, seed: int = 0,
+                 batch_size: int = HP.batch_size,
+                 max_epochs: int = HP.max_epochs,
+                 patience: int = HP.patience, lr: float = HP.lr,
+                 use_kernel: bool = False,
+                 ablation: bool = False) -> RunResult:
+    """K-party protocol; same feature set as the 2-party ``run_apcvfl``
+    (``ablation=True`` trains g3 without the distillation term)."""
     key = jax.random.PRNGKey(seed)
     keys = jax.random.split(key, len(sc.passives) + 3)
     epochs = {}
+    train_kw = dict(batch_size=batch_size, max_epochs=max_epochs,
+                    patience=patience, lr=lr)
 
     common, channels = align_k(sc.active.ids, [p.ids for p in sc.passives])
     idx_a = _index_of(sc.active.ids, common)
     idx_ps = [_index_of(p.ids, common) for p in sc.passives]
-
-    # --- step 1 at every party: ONE batched vmapped run for all K g1s -----
     xa = sc.active.x
-    specs = [training.PartySpec(
-        ae.init_autoencoder(keys[0],
-                            ae.table3_encoder("g1_active", xa.shape[1])),
-        {"x": xa}, seed)]
-    for i, p in enumerate(sc.passives):
-        specs.append(training.PartySpec(
-            ae.init_autoencoder(keys[i + 1],
-                                ae.table3_encoder("g1_passive",
-                                                  p.x.shape[1])),
-            {"x": p.x}, seed + i + 1))
-    results = training.train_many(specs, ae.masked_recon_loss,
-                                  batch_size=batch_size,
-                                  max_epochs=max_epochs)
-    ra, r_ps = results[0], results[1:]
-    epochs["g1_active"] = ra.epochs_run
-    za = np.asarray(ae.encode(ra.params, jnp.asarray(xa[idx_a])))
 
-    blocks = [za]
-    for i, (p, idx_p, ch, rp) in enumerate(zip(sc.passives, idx_ps,
-                                               channels, r_ps)):
-        epochs[f"g1_passive{i}"] = rp.epochs_run
-        zp = np.asarray(ae.encode(rp.params, jnp.asarray(p.x[idx_p])))
-        ch.send_array(f"step1/Z_passive{i}_aligned", zp)   # THE exchange
-        blocks.append(zp)
+    if not ablation:
+        # --- step 1 at every party: ONE batched vmapped run for all K g1s --
+        specs = [training.PartySpec(
+            ae.init_autoencoder(keys[0],
+                                ae.table3_encoder("g1_active", xa.shape[1])),
+            {"x": xa}, seed)]
+        for i, p in enumerate(sc.passives):
+            specs.append(training.PartySpec(
+                ae.init_autoencoder(keys[i + 1],
+                                    ae.table3_encoder("g1_passive",
+                                                      p.x.shape[1])),
+                {"x": p.x}, seed + i + 1))
+        results = training.train_many(specs, ae.masked_recon_loss,
+                                      **train_kw)
+        ra, r_ps = results[0], results[1:]
+        epochs["g1_active"] = ra.epochs_run
+        za = np.asarray(ae.encode(ra.params, jnp.asarray(xa[idx_a])))
 
-    # --- steps 2-4 at the active party --------------------------------------
-    zj = np.concatenate(blocks, axis=1).astype(np.float32)
-    r2 = training.train(
-        ae.init_autoencoder(keys[-2], ae.table3_encoder("g2", zj.shape[1])),
-        {"x": zj}, ae.recon_loss, batch_size=batch_size,
-        max_epochs=max_epochs, seed=seed + 100)
-    epochs["g2"] = r2.epochs_run
-    zt_al = np.asarray(ae.encode(r2.params, jnp.asarray(zj)))
-    m2 = zt_al.shape[1]
+        blocks = [za]
+        for i, (p, idx_p, ch, rp) in enumerate(zip(sc.passives, idx_ps,
+                                                   channels, r_ps)):
+            epochs[f"g1_passive{i}"] = rp.epochs_run
+            zp = np.asarray(ae.encode(rp.params, jnp.asarray(p.x[idx_p])))
+            ch.send_array(f"step1/Z_passive{i}_aligned", zp)  # THE exchange
+            blocks.append(zp)
 
+        # --- step 2 at the active party -------------------------------------
+        zj = np.concatenate(blocks, axis=1).astype(np.float32)
+        r2 = training.train(
+            ae.init_autoencoder(keys[-2],
+                                ae.table3_encoder("g2", zj.shape[1])),
+            {"x": zj}, ae.recon_loss, seed=seed + 100, **train_kw)
+        epochs["g2"] = r2.epochs_run
+        zt_al = np.asarray(ae.encode(r2.params, jnp.asarray(zj)))
+        m2 = zt_al.shape[1]
+    else:
+        m2 = ae.table3_encoder("g2", 1)[-1]
+        zt_al = None
+
+    # --- steps 3-4 at the active party --------------------------------------
     n_a = len(xa)
     z_teacher = np.zeros((n_a, m2), np.float32)
     mask = np.zeros((n_a,), np.float32)
-    z_teacher[idx_a] = zt_al
-    mask[idx_a] = 1.0
+    if not ablation:
+        z_teacher[idx_a] = zt_al
+        mask[idx_a] = 1.0
     r3 = training.train(
         ae.init_autoencoder(keys[-1], ae.table3_encoder("g3", xa.shape[1])),
         {"x": xa, "z_teacher": z_teacher, "aligned": mask},
-        distill.make_loss(lam=lam, kind=kind), batch_size=batch_size,
-        max_epochs=max_epochs, seed=seed + 200)
+        distill.make_loss(lam=lam, kind=kind, use_kernel=use_kernel),
+        seed=seed + 200, **train_kw)
     epochs["g3"] = r3.epochs_run
 
     z_all = np.asarray(ae.encode(r3.params, jnp.asarray(xa)))
     metrics = clf.kfold_cv(z_all, sc.active.y, sc.n_classes, seed=seed)
-    return APCVFLKResult(metrics, channels, comm.APCVFL_ROUNDS, m2, epochs)
+    data_rounds = 0 if ablation else comm.APCVFL_ROUNDS
+    return RunResult(method="apcvfl", metrics=metrics, rounds=data_rounds,
+                     epochs=epochs, comm=comm.summarize(channels), seed=seed,
+                     z_dim=m2, params={"g3": r3.params},
+                     channels=tuple(channels))
 
 
 def _index_of(ids: np.ndarray, subset: np.ndarray) -> np.ndarray:

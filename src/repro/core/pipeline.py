@@ -18,15 +18,19 @@ autoencoders train TOGETHER through ``training.train_many`` — params and
 data zero-padded to common shapes, stacked on a leading party axis, every
 epoch one vmapped scan — the same batched engine ``core.multiparty`` uses
 for K parties (this is the K=2 special case).
+
+Hyperparameter defaults come from ``configs.apcvfl_paper.TABULAR`` (the
+paper's Appendix-B settings); every entry point returns the unified
+``experiments.results.RunResult``, so declarative specs
+(``repro.experiments``) and direct calls see identical behavior.
 """
 from __future__ import annotations
-
-from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.configs.apcvfl_paper import TABULAR as HP
 from repro.core import autoencoder as ae
 from repro.core import classifier as clf
 from repro.core import comm
@@ -34,21 +38,14 @@ from repro.core import distill
 from repro.core import training
 from repro.core.psi import psi
 from repro.data.vertical import VFLScenario
+from repro.experiments.results import RunResult
 
 
-@dataclass
-class APCVFLResult:
-    metrics: dict                 # k-fold CV metrics on enhanced dataset
-    channel: comm.Channel         # measured communication
-    rounds: int
-    epochs: dict                  # epochs run per stage
-    z_dim: int
-    params: dict = field(default_factory=dict)   # trained models
-
-
-def run_apcvfl(sc: VFLScenario, *, lam: float = 0.01, kind: str = "mse",
-               seed: int = 0, batch_size: int = 128, max_epochs: int = 200,
-               use_kernel: bool = False, ablation: bool = False) -> APCVFLResult:
+def run_apcvfl(sc: VFLScenario, *, lam: float = HP.lam, kind: str = HP.kind,
+               seed: int = 0, batch_size: int = HP.batch_size,
+               max_epochs: int = HP.max_epochs, patience: int = HP.patience,
+               lr: float = HP.lr, use_kernel: bool = False,
+               ablation: bool = False) -> RunResult:
     """Full protocol. ``ablation=True`` trains g3 WITHOUT the distillation
     term (paper's 'Ablation' curves — isolates the nonlinear-encoder gain).
     """
@@ -56,11 +53,12 @@ def run_apcvfl(sc: VFLScenario, *, lam: float = 0.01, kind: str = "mse",
     k1, k2, k3, k4 = jax.random.split(key, 4)
     channel = comm.Channel()
     epochs = {}
+    train_kw = dict(batch_size=batch_size, max_epochs=max_epochs,
+                    patience=patience, lr=lr)
 
     # --- PSI on IDs (assumed precondition in the paper; bytes logged) ------
     aligned_ids, idx_a, idx_p = psi(sc.active.ids, sc.passive.ids,
                                     channel=channel)
-    psi_rounds = 2
 
     xa, xp = sc.active.x, sc.passive.x
 
@@ -73,23 +71,22 @@ def run_apcvfl(sc: VFLScenario, *, lam: float = 0.01, kind: str = "mse",
         ra, rp = training.train_many(
             [training.PartySpec(ae_a, {"x": xa}, seed),
              training.PartySpec(ae_p, {"x": xp}, seed + 1)],
-            ae.masked_recon_loss, batch_size=batch_size,
-            max_epochs=max_epochs)
+            ae.masked_recon_loss, **train_kw)
         epochs["g1_active"], epochs["g1_passive"] = ra.epochs_run, rp.epochs_run
 
         za_al = np.asarray(ae.encode(ra.params, jnp.asarray(xa[idx_a])))
         zp_al = np.asarray(ae.encode(rp.params, jnp.asarray(xp[idx_p])))
 
         # THE single information exchange: passive -> active, aligned latents
-        channel.send_array("step1/Z_passive_aligned", zp_al)
+        channel.send_array("step1/Z_passive_aligned", zp_al,
+                           direction="uplink")
 
         # --- Step 2: aligned (joint) representation learning ---------------
         zj = np.concatenate([za_al, zp_al], axis=1).astype(np.float32)
         w2 = ae.table3_encoder("g2", zj.shape[1])
         ae_2 = ae.init_autoencoder(k3, w2)
-        r2 = training.train(ae_2, {"x": zj}, ae.recon_loss,
-                            batch_size=batch_size, max_epochs=max_epochs,
-                            seed=seed + 2)
+        r2 = training.train(ae_2, {"x": zj}, ae.recon_loss, seed=seed + 2,
+                            **train_kw)
         epochs["g2"] = r2.epochs_run
         z_teacher_al = np.asarray(ae.encode(r2.params, jnp.asarray(zj)))
         m2 = z_teacher_al.shape[1]
@@ -109,9 +106,8 @@ def run_apcvfl(sc: VFLScenario, *, lam: float = 0.01, kind: str = "mse",
     ae_3 = ae.init_autoencoder(k4, w3)
     loss3 = distill.make_loss(lam=lam, kind=kind, use_kernel=use_kernel)
     r3 = training.train(ae_3, {"x": xa, "z_teacher": z_teacher,
-                               "aligned": mask}, loss3,
-                        batch_size=batch_size, max_epochs=max_epochs,
-                        seed=seed + 3)
+                               "aligned": mask}, loss3, seed=seed + 3,
+                        **train_kw)
     epochs["g3"] = r3.epochs_run
 
     # --- Step 4: classifier on the enhanced dataset -------------------------
@@ -119,12 +115,16 @@ def run_apcvfl(sc: VFLScenario, *, lam: float = 0.01, kind: str = "mse",
     metrics = clf.kfold_cv(z_all, sc.active.y, sc.n_classes, seed=seed)
 
     data_rounds = 0 if ablation else comm.APCVFL_ROUNDS
-    return APCVFLResult(metrics, channel, data_rounds, epochs, m2,
-                        params={"g3": r3.params})
+    return RunResult(method="apcvfl", metrics=metrics, rounds=data_rounds,
+                     epochs=epochs, comm=channel.summary(), seed=seed,
+                     z_dim=m2, params={"g3": r3.params}, channels=(channel,))
 
 
-def run_local_baseline(sc: VFLScenario, seed: int = 0) -> dict:
-    """Paper 'Local': probe on raw active features."""
+def run_local_baseline(sc, seed: int = 0) -> dict:
+    """Paper 'Local': probe on raw active features.  Works for 2-party and
+    K-party scenarios (only ``sc.active`` is touched); returns the bare
+    metrics dict — the ``experiments`` registry wraps it into a
+    ``RunResult``."""
     return clf.kfold_cv(sc.active.x, sc.active.y, sc.n_classes, seed=seed)
 
 
@@ -133,14 +133,18 @@ def run_local_baseline(sc: VFLScenario, seed: int = 0) -> dict:
 # ---------------------------------------------------------------------------
 
 def run_apcvfl_aligned_only(sc: VFLScenario, *, seed: int = 0,
-                            batch_size: int = 128, max_epochs: int = 200,
-                            test_size: int = 500) -> dict:
+                            batch_size: int = HP.batch_size,
+                            max_epochs: int = HP.max_epochs,
+                            patience: int = HP.patience, lr: float = HP.lr,
+                            test_size: int = HP.test_size) -> RunResult:
     """Classical fully-aligned setting: train the classifier directly on the
     joint latents g2(concat(Z_a, Z_p)); distillation is skipped (no
     unaligned rows exist to distill into)."""
     key = jax.random.PRNGKey(seed)
     k1, k2, k3 = jax.random.split(key, 3)
     channel = comm.Channel()
+    train_kw = dict(batch_size=batch_size, max_epochs=max_epochs,
+                    patience=patience, lr=lr)
     _, idx_a, idx_p = psi(sc.active.ids, sc.passive.ids, channel=channel)
     xa, xp = sc.active.x[idx_a], sc.passive.x[idx_p]
     y = sc.active.y[idx_a]
@@ -150,16 +154,15 @@ def run_apcvfl_aligned_only(sc: VFLScenario, *, seed: int = 0,
     ra, rp = training.train_many(
         [training.PartySpec(ae_a, {"x": xa}, seed),
          training.PartySpec(ae_p, {"x": xp}, seed + 1)],
-        ae.masked_recon_loss, batch_size=batch_size, max_epochs=max_epochs)
+        ae.masked_recon_loss, **train_kw)
     za = np.asarray(ae.encode(ra.params, jnp.asarray(xa)))
     zp = np.asarray(ae.encode(rp.params, jnp.asarray(xp)))
-    channel.send_array("step1/Z_passive_aligned", zp)
+    channel.send_array("step1/Z_passive_aligned", zp, direction="uplink")
 
     zj = np.concatenate([za, zp], 1).astype(np.float32)
     ae_2 = ae.init_autoencoder(k3, ae.table3_encoder("g2", zj.shape[1]))
-    r2 = training.train(ae_2, {"x": zj}, ae.recon_loss,
-                        batch_size=batch_size, max_epochs=max_epochs,
-                        seed=seed + 2)
+    r2 = training.train(ae_2, {"x": zj}, ae.recon_loss, seed=seed + 2,
+                        **train_kw)
     z = np.asarray(ae.encode(r2.params, jnp.asarray(zj)))
 
     # train/test split as in the SplitNN comparison (test_size held out)
@@ -170,9 +173,12 @@ def run_apcvfl_aligned_only(sc: VFLScenario, *, seed: int = 0,
                             sc.n_classes)
     pred = clf.predict(params, z[te])
     metrics = clf.f1_scores(y[te], pred, sc.n_classes)
-    return {"metrics": metrics, "channel": channel, "rounds": 1,
-            "epochs": {"g1_active": ra.epochs_run,
-                       "g1_passive": rp.epochs_run, "g2": r2.epochs_run}}
+    return RunResult(method="apcvfl_aligned_only", metrics=metrics, rounds=1,
+                     epochs={"g1_active": ra.epochs_run,
+                             "g1_passive": rp.epochs_run,
+                             "g2": r2.epochs_run},
+                     comm=channel.summary(), seed=seed, z_dim=z.shape[1],
+                     params={"g2": r2.params}, channels=(channel,))
 
 
 # ---------------------------------------------------------------------------

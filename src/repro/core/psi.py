@@ -29,8 +29,10 @@ def psi(ids_a: np.ndarray, ids_b: np.ndarray, *, salt: bytes = b"psi",
     ha = _hash_ids(ids_a, salt)
     hb = _hash_ids(ids_b, salt)
     if channel is not None:
-        channel.send("psi/hashes_a", len(ids_a) * 32)
-        channel.send("psi/hashes_b", len(ids_b) * 32)
+        # a = active party by convention: its hashes flow OUT (downlink),
+        # the peer's reply flows back toward it (uplink)
+        channel.send("psi/hashes_a", len(ids_a) * 32, direction="downlink")
+        channel.send("psi/hashes_b", len(ids_b) * 32, direction="uplink")
     common = sorted(ha[h] for h in (set(ha) & set(hb)))
     common = np.asarray(common, dtype=np.int64)
     pos_a = {int(v): i for i, v in enumerate(ids_a)}

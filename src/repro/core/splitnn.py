@@ -8,23 +8,28 @@ byte accounting exactly as Appendix E.2.
 
 Training runs on the device-resident scan engine (``core.training``); the
 per-batch communication pattern above is ACCOUNTED analytically (it is the
-protocol being simulated), not re-enacted step-by-step on the host.
+protocol being simulated), not re-enacted step-by-step on the host.  The
+analytic totals are recorded into the result's ``comm.Channel`` — forward
+embeddings as uplink, gradient returns as downlink — so SplitNN reports
+the same per-direction/per-stage summary as every other method.
+
+Hyperparameter defaults come from ``configs.apcvfl_paper.TABULAR``; the
+entry point returns the unified ``experiments.results.RunResult``.
 """
 from __future__ import annotations
-
-from dataclasses import dataclass
-from math import ceil
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.configs.apcvfl_paper import TABULAR as HP
 from repro.core import autoencoder as ae
 from repro.core import classifier as clf
 from repro.core import comm
 from repro.core import training
 from repro.core.psi import psi
 from repro.data.vertical import VFLScenario
+from repro.experiments.results import RunResult
 
 
 def _head_widths(n_classes: int) -> list:
@@ -53,17 +58,13 @@ def splitnn_loss(params: dict, batch: dict) -> jax.Array:
     return jnp.mean(lse - gold)
 
 
-@dataclass
-class SplitNNResult:
-    metrics: dict
-    rounds: int
-    comm_bytes: int
-    epochs_run: int
-
-
-def run_splitnn(sc: VFLScenario, *, seed: int = 0, batch_size: int = 128,
-                max_epochs: int = 200, test_size: int = 500) -> SplitNNResult:
-    _, idx_a, idx_p = psi(sc.active.ids, sc.passive.ids)
+def run_splitnn(sc: VFLScenario, *, seed: int = 0,
+                batch_size: int = HP.batch_size,
+                max_epochs: int = HP.max_epochs, patience: int = HP.patience,
+                lr: float = HP.lr,
+                test_size: int = HP.test_size) -> RunResult:
+    channel = comm.Channel()
+    _, idx_a, idx_p = psi(sc.active.ids, sc.passive.ids, channel=channel)
     xa, xp = sc.active.x[idx_a], sc.passive.x[idx_p]
     y = sc.active.y[idx_a]
 
@@ -76,15 +77,25 @@ def run_splitnn(sc: VFLScenario, *, seed: int = 0, batch_size: int = 128,
     res = training.train(params,
                          {"xa": xa[tr], "xp": xp[tr], "y": y[tr]},
                          splitnn_loss, batch_size=batch_size,
-                         max_epochs=max_epochs, seed=seed)
+                         max_epochs=max_epochs, patience=patience, lr=lr,
+                         seed=seed)
 
     pred = np.asarray(jnp.argmax(
         splitnn_logits(res.params, jnp.asarray(xa[te]), jnp.asarray(xp[te])),
         axis=-1))
     metrics = clf.f1_scores(y[te], pred, sc.n_classes)
 
+    # analytic Appendix-E.2 accounting, recorded on the channel so the
+    # summary carries the same direction/stage structure as measured links
     n_al = len(tr)
     epochs = res.epochs_run
+    channel.send("train/forward_embeddings",
+                 comm.splitnn_forward_bytes(epochs, n_al),
+                 direction="uplink")
+    channel.send("train/backward_gradients",
+                 comm.splitnn_backprop_bytes(epochs, n_al, batch_size),
+                 direction="downlink")
     rounds = comm.splitnn_rounds(epochs, n_al, batch_size)
-    nbytes = comm.splitnn_footprint_bytes(epochs, n_al, batch_size)
-    return SplitNNResult(metrics, rounds, nbytes, epochs)
+    return RunResult(method="splitnn", metrics=metrics, rounds=rounds,
+                     epochs={"splitnn": epochs}, comm=channel.summary(),
+                     seed=seed, channels=(channel,))

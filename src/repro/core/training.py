@@ -22,9 +22,10 @@ The engine:
 
 Batching semantics: ``batch_size`` is clamped to the train-split size and the
 epoch DROPS the remainder rows of the permutation (``n_batches = n_tr // bs``)
-so every scan step sees a static batch shape. The legacy loop instead ran a
-trailing partial batch when it had >= 2 rows; with divisible sizes the two
-engines take identical step counts (the parity test pins this).
+so every scan step sees a static batch shape.  Correctness is pinned by a
+stored-trace oracle (``tests/data/train_trace.json``): a committed loss
+trajectory recorded from this engine, which any semantic change to the
+split, permutation, loss, or optimizer math will break.
 
 ``epoch_callback(epoch, params, train_loss, val_loss)`` receives a defensive
 copy of the params (the engine's own buffers are donated into the next
@@ -67,9 +68,9 @@ permutation as ``train`` (same fold_in key); when additionally
 results match the sequential path to float tolerance — the parity tests in
 ``tests/test_train_many.py`` pin this.
 
-``train_legacy`` keeps the original per-batch host loop as a reference
-oracle for the parity test and ``benchmarks/trainbench.py``; it will be
-removed once the scan engine has soaked.
+The original per-batch host loop (``train_legacy``) soaked as a live
+parity oracle through PRs 1-2 and is now retired; its role is covered by
+the stored-trace oracle above.
 """
 from __future__ import annotations
 
@@ -389,85 +390,3 @@ def train_many(specs: Sequence[PartySpec], loss_fn: Callable, *,
                                    int(epochs_run[i] * nb[i]),
                                    tl_hist[i], vl_hist[i]))
     return results
-
-
-# ---------------------------------------------------------------------------
-# legacy per-batch host loop — reference oracle for the parity test and
-# benchmarks/trainbench.py only; new code should call ``train``
-# ---------------------------------------------------------------------------
-
-def _adam_init(params):
-    z = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
-    return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params),
-            "t": jnp.zeros((), jnp.int32)}
-
-
-@partial(jax.jit, static_argnames=("loss_fn", "lr"))
-def _adam_step(params, opt, batch, loss_fn, lr=1e-3):
-    loss, grads = jax.value_and_grad(loss_fn)(params, batch)
-    t = opt["t"] + 1
-    b1, b2, eps = 0.9, 0.999, 1e-8
-
-    def upd(p, g, m, v):
-        g = g.astype(jnp.float32)
-        m = b1 * m + (1 - b1) * g
-        v = b2 * v + (1 - b2) * g * g
-        mh = m / (1 - b1 ** t.astype(jnp.float32))
-        vh = v / (1 - b2 ** t.astype(jnp.float32))
-        return (p - lr * mh / (jnp.sqrt(vh) + eps)).astype(p.dtype), m, v
-
-    out = jax.tree.map(upd, params, grads, opt["m"], opt["v"])
-    istuple = lambda x: isinstance(x, tuple)
-    params = jax.tree.map(lambda o: o[0], out, is_leaf=istuple)
-    m = jax.tree.map(lambda o: o[1], out, is_leaf=istuple)
-    v = jax.tree.map(lambda o: o[2], out, is_leaf=istuple)
-    return params, {"m": m, "v": v, "t": t}, loss
-
-
-def train_legacy(params, data: dict, loss_fn: Callable, *,
-                 batch_size: int = 128, max_epochs: int = 200,
-                 patience: int = 10, lr: float = 1e-3, val_frac: float = 0.1,
-                 seed: int = 0,
-                 epoch_callback: Optional[Callable] = None) -> TrainResult:
-    """Original host-side per-batch loop (re-uploads every mini-batch and
-    syncs ``float(loss)`` every step). Reference oracle — see module docs."""
-    n = len(next(iter(data.values())))
-    rng = np.random.RandomState(seed)
-    perm = rng.permutation(n)
-    n_val = max(int(n * val_frac), 1)
-    val_idx, tr_idx = perm[:n_val], perm[n_val:]
-    val_batch = {k: jnp.asarray(v[val_idx]) for k, v in data.items()}
-    tr = {k: v[tr_idx] for k, v in data.items()}
-    n_tr = len(tr_idx)
-
-    opt = _adam_init(params)
-    best_val, best_params, since_best = np.inf, params, 0
-    tl_hist, vl_hist, steps = [], [], 0
-    vloss_fn = jax.jit(loss_fn)
-
-    epochs = 0
-    for epoch in range(max_epochs):
-        epochs = epoch + 1
-        order = rng.permutation(n_tr)
-        ep_loss, nb = 0.0, 0
-        for s in range(0, n_tr, batch_size):
-            idx = order[s:s + batch_size]
-            if len(idx) < 2:
-                continue
-            batch = {k: jnp.asarray(v[idx]) for k, v in tr.items()}
-            params, opt, loss = _adam_step(params, opt, batch, loss_fn, lr)
-            ep_loss += float(loss)
-            nb += 1
-            steps += 1
-        vl = float(vloss_fn(params, val_batch))
-        tl_hist.append(ep_loss / max(nb, 1))
-        vl_hist.append(vl)
-        if epoch_callback is not None:
-            epoch_callback(epoch, params, tl_hist[-1], vl)
-        if vl < best_val - 1e-6:
-            best_val, best_params, since_best = vl, params, 0
-        else:
-            since_best += 1
-            if since_best >= patience:
-                break
-    return TrainResult(best_params, epochs, steps, tl_hist, vl_hist)

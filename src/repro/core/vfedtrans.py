@@ -6,15 +6,18 @@ Key structural contrast with APC-VFL (paper Sec. 6.1): the federated
 representation dimension is FIXED at x_total by FedSVD (the "embedding
 dimension constraint"); communication includes the dense n x n mask A
 (footprint grows ~ |D_A|^2, Eq. 10) and a third-party server is required.
+
+Hyperparameter defaults come from ``configs.apcvfl_paper.TABULAR``; the
+entry point returns the unified ``experiments.results.RunResult`` (the
+fixed FedSVD representation dimension is reported as ``z_dim``).
 """
 from __future__ import annotations
-
-from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.configs.apcvfl_paper import TABULAR as HP
 from repro.core import autoencoder as ae
 from repro.core import classifier as clf
 from repro.core import comm
@@ -22,6 +25,7 @@ from repro.core import fedsvd
 from repro.core import training
 from repro.core.psi import psi
 from repro.data.vertical import VFLScenario
+from repro.experiments.results import RunResult
 
 
 def _distill_loss(params: dict, batch: dict) -> jax.Array:
@@ -36,16 +40,11 @@ def _distill_loss(params: dict, batch: dict) -> jax.Array:
     return jnp.mean(rec + dis * mask)
 
 
-@dataclass
-class VFedTransResult:
-    metrics: dict
-    channel: comm.Channel
-    rounds: int
-    rep_dim: int
-
-
-def run_vfedtrans(sc: VFLScenario, *, seed: int = 0, batch_size: int = 128,
-                  max_epochs: int = 200) -> VFedTransResult:
+def run_vfedtrans(sc: VFLScenario, *, seed: int = 0,
+                  batch_size: int = HP.batch_size,
+                  max_epochs: int = HP.max_epochs,
+                  patience: int = HP.patience,
+                  lr: float = HP.lr) -> RunResult:
     channel = comm.Channel()
     _, idx_a, idx_p = psi(sc.active.ids, sc.passive.ids, channel=channel)
     xa_al = sc.active.x[idx_a]
@@ -67,10 +66,13 @@ def run_vfedtrans(sc: VFLScenario, *, seed: int = 0, batch_size: int = 128,
     res = training.train(params, {"x": sc.active.x, "z_teacher": z_teacher,
                                   "aligned": mask}, _distill_loss,
                          batch_size=batch_size, max_epochs=max_epochs,
-                         seed=seed)
+                         patience=patience, lr=lr, seed=seed)
 
     # --- enriched dataset: [X_local, transferred reps] ---------------------
     z = np.asarray(ae.encode(res.params, jnp.asarray(sc.active.x)))
     enriched = np.concatenate([sc.active.x, z], axis=1)
     metrics = clf.kfold_cv(enriched, sc.active.y, sc.n_classes, seed=seed)
-    return VFedTransResult(metrics, channel, fs.rounds, rep_dim)
+    return RunResult(method="vfedtrans", metrics=metrics, rounds=fs.rounds,
+                     epochs={"distill": res.epochs_run},
+                     comm=channel.summary(), seed=seed, z_dim=rep_dim,
+                     params={"extractor": res.params}, channels=(channel,))

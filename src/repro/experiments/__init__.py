@@ -1,0 +1,41 @@
+"""Declarative experiment API: specs, method registry, sweeps.
+
+Public surface::
+
+    from repro.experiments import (ExperimentSpec, MethodSpec, ScenarioSpec,
+                                   RunResult, register_method, get_method,
+                                   available_methods, run_method,
+                                   sweep, tidy, build_scenario)
+
+Only the pure-data modules (``specs``, ``results``) load eagerly; the
+registry, built-in method adapters, and sweep engine — which pull in jax
+and the ``repro.core`` stack — resolve lazily on first attribute access,
+keeping ``import repro.experiments`` cheap and cycle-free (the core
+method modules themselves import ``repro.experiments.results``).
+"""
+from repro.experiments.results import RunResult                  # noqa: F401
+from repro.experiments.specs import (ExperimentSpec, MethodSpec,  # noqa: F401
+                                     ScenarioSpec)
+
+_LAZY = {
+    "register_method": "registry",
+    "get_method": "registry",
+    "available_methods": "registry",
+    "run_method": "registry",
+    "sweep": "sweeps",
+    "tidy": "sweeps",
+    "build_scenario": "sweeps",
+}
+
+__all__ = ["ExperimentSpec", "MethodSpec", "ScenarioSpec", "RunResult",
+           *_LAZY]
+
+
+def __getattr__(name: str):
+    mod = _LAZY.get(name)
+    if mod is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+    value = getattr(importlib.import_module(f"{__name__}.{mod}"), name)
+    globals()[name] = value          # cache: next access skips __getattr__
+    return value

@@ -1,0 +1,54 @@
+"""Built-in method adapters: the ``repro.core`` entry points behind the
+registry's one signature ``(scenario, spec, *, seed) -> RunResult``.
+
+Each adapter forwards ``spec.params`` as keyword overrides to the
+underlying ``run_*`` function, whose defaults are the paper's settings
+(``configs.apcvfl_paper.TABULAR``) — an empty spec reproduces the paper.
+Importing this module registers every adapter (the registry does so
+lazily on first lookup).
+"""
+from __future__ import annotations
+
+from repro.core import comm, multiparty, pipeline, splitnn, vfedtrans
+from repro.core.multiparty import VFLScenarioK
+from repro.experiments.registry import register_method
+from repro.experiments.results import RunResult
+from repro.experiments.specs import MethodSpec
+
+
+@register_method("local", supports_multiparty=True)
+def _local(scenario, spec: MethodSpec, *, seed: int = 0) -> RunResult:
+    """Raw-feature probe at the active party: no training hyperparameters,
+    no communication — ``spec.params`` (e.g. sweep-wide overrides like
+    ``max_epochs``) is intentionally ignored."""
+    metrics = pipeline.run_local_baseline(scenario, seed=seed)
+    return RunResult(method="local", metrics=metrics, rounds=0,
+                     comm=comm.Channel().summary(), seed=seed)
+
+
+@register_method("apcvfl", supports_multiparty=True,
+                 params_from=pipeline.run_apcvfl)
+def _apcvfl(scenario, spec: MethodSpec, *, seed: int = 0) -> RunResult:
+    # run_apcvfl and run_apcvfl_k share one keyword surface (pinned by
+    # test_apcvfl_k_signature_matches_2party), so params_from covers both
+    if isinstance(scenario, VFLScenarioK):
+        return multiparty.run_apcvfl_k(scenario, seed=seed, **spec.params)
+    return pipeline.run_apcvfl(scenario, seed=seed, **spec.params)
+
+
+@register_method("apcvfl_aligned_only",
+                 params_from=pipeline.run_apcvfl_aligned_only)
+def _apcvfl_aligned_only(scenario, spec: MethodSpec, *,
+                         seed: int = 0) -> RunResult:
+    return pipeline.run_apcvfl_aligned_only(scenario, seed=seed,
+                                            **spec.params)
+
+
+@register_method("splitnn", params_from=splitnn.run_splitnn)
+def _splitnn(scenario, spec: MethodSpec, *, seed: int = 0) -> RunResult:
+    return splitnn.run_splitnn(scenario, seed=seed, **spec.params)
+
+
+@register_method("vfedtrans", params_from=vfedtrans.run_vfedtrans)
+def _vfedtrans(scenario, spec: MethodSpec, *, seed: int = 0) -> RunResult:
+    return vfedtrans.run_vfedtrans(scenario, seed=seed, **spec.params)

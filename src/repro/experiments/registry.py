@@ -1,0 +1,81 @@
+"""Method registry: one uniform signature for every VFL method.
+
+A registered runner has the signature::
+
+    runner(scenario, spec: MethodSpec, *, seed: int) -> RunResult
+
+where ``scenario`` is a built ``VFLScenario`` (2 parties) or
+``VFLScenarioK`` (K > 2, only for runners registered with
+``supports_multiparty=True``) and ``spec.params`` carries the method's
+hyperparameter overrides.  The built-in adapters in
+``repro.experiments.methods`` wrap the ``repro.core`` entry points; they
+are loaded lazily on first lookup so importing this module stays cheap
+and cycle-free.
+"""
+from __future__ import annotations
+
+import inspect
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional, Tuple
+
+
+@dataclass(frozen=True)
+class MethodEntry:
+    name: str
+    fn: Callable
+    supports_multiparty: bool = False
+    accepts: Optional[frozenset] = None   # param names; None = accepts any
+
+
+_REGISTRY: Dict[str, MethodEntry] = {}
+
+
+def _kwarg_names(fn: Callable) -> frozenset:
+    """Keyword parameter names of a ``run_*`` entry point, minus the
+    scenario positional and the registry-supplied ``seed``."""
+    params = list(inspect.signature(fn).parameters.values())
+    return frozenset(p.name for p in params[1:] if p.name != "seed")
+
+
+def register_method(name: str, *, supports_multiparty: bool = False,
+                    params_from: Optional[Callable] = None):
+    """Decorator: register ``fn`` as the runner for ``name``.
+
+    ``params_from`` names the underlying ``run_*`` entry point whose
+    keyword signature defines the spec params this method accepts —
+    ``sweep`` validates specs against it eagerly, before any training
+    runs.  Omit it for runners that ignore params (e.g. ``local``).
+    Re-registering a name raises — methods are identities, not plugins to
+    be silently shadowed."""
+    def deco(fn: Callable) -> Callable:
+        if name in _REGISTRY:
+            raise ValueError(f"method {name!r} is already registered")
+        accepts = _kwarg_names(params_from) if params_from else None
+        _REGISTRY[name] = MethodEntry(name, fn, supports_multiparty, accepts)
+        return fn
+    return deco
+
+
+def _ensure_builtins() -> None:
+    # the import registers the built-in adapters as a side effect
+    from repro.experiments import methods  # noqa: F401
+
+
+def available_methods() -> Tuple[str, ...]:
+    _ensure_builtins()
+    return tuple(sorted(_REGISTRY))
+
+
+def get_method(name: str) -> MethodEntry:
+    _ensure_builtins()
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown method {name!r}; registered methods: "
+            f"{', '.join(sorted(_REGISTRY))}") from None
+
+
+def run_method(name: str, scenario, spec, *, seed: int = 0):
+    """Dispatch one run through the registry (convenience wrapper)."""
+    return get_method(name).fn(scenario, spec, seed=seed)

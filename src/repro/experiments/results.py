@@ -1,0 +1,64 @@
+"""The unified experiment result type.
+
+Every registered method — whatever its internal protocol — returns one
+``RunResult``: metrics from the shared evaluation, the measured
+communication summary (``comm.Channel.summary()`` shape), per-stage epoch
+counts, and (optionally) trained params and the live per-link channels for
+in-process inspection.  ``to_record()`` flattens a result into one tidy
+row for sweeps, JSON files and dataframes.
+
+This module is imported by the ``repro.core`` method modules, so it must
+stay free of any ``repro.core`` model/training imports (``comm`` is the
+one dependency-free exception).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+from repro.core import comm
+
+
+@dataclass
+class RunResult:
+    """Uniform outcome of one (method, scenario, seed) run.
+
+    ``comm`` is a JSON-ready dict in the ``Channel.summary()`` shape
+    (total/uplink/downlink bytes, transfer count, per-stage bytes);
+    ``rounds`` is the protocol's round count (analytic where the protocol
+    prescribes it, e.g. SplitNN's per-batch exchanges).  ``channels`` and
+    ``params`` are live objects for in-process use and are excluded from
+    ``to_record()``.
+    """
+    method: str
+    metrics: Dict[str, float]
+    rounds: int
+    epochs: Dict[str, int] = field(default_factory=dict)
+    comm: Dict = field(default_factory=dict)
+    seed: int = 0
+    scenario: Dict = field(default_factory=dict)
+    z_dim: Optional[int] = None
+    params: Optional[dict] = field(default=None, repr=False)
+    channels: Tuple[comm.Channel, ...] = field(default=(), repr=False)
+
+    @property
+    def channel(self) -> Optional[comm.Channel]:
+        """The single link of a 2-party run (None for local baselines)."""
+        return self.channels[0] if self.channels else None
+
+    def to_record(self) -> dict:
+        """One flat, JSON-ready row: scenario coordinates, metrics, and
+        communication totals (per-stage detail stays in ``self.comm``)."""
+        rec = {"method": self.method, "seed": self.seed}
+        rec.update(self.scenario)
+        rec.update(self.metrics)
+        rec.update({
+            "rounds": self.rounds,
+            "comm_total_bytes": self.comm.get("total_bytes", 0),
+            "comm_uplink_bytes": self.comm.get("uplink_bytes", 0),
+            "comm_downlink_bytes": self.comm.get("downlink_bytes", 0),
+            "comm_mb": self.comm.get("total_mb", 0.0),
+            "epochs_total": int(sum(self.epochs.values())),
+            "z_dim": self.z_dim,
+        })
+        return rec

@@ -1,0 +1,115 @@
+"""Scenario building and grid execution for declarative experiments.
+
+``sweep(spec)`` expands the spec's aligned x K x seed grid, builds each
+scenario ONCE and runs every method on it (so per-cell PSI inputs, data
+partitions and label vectors are identical across methods), and returns a
+flat list of uniform ``RunResult`` records.  ``tidy(results)`` flattens
+them into JSON-ready rows for files and dataframes.
+
+Validation is eager: unknown method names and K>2 grids containing
+2-party-only methods raise BEFORE any scenario is built or any model
+compiled.
+"""
+from __future__ import annotations
+
+from dataclasses import replace
+from typing import Callable, List, Optional
+
+from repro.data.synthetic import make_dataset
+from repro.data.vertical import make_scenario
+from repro.experiments.registry import get_method
+from repro.experiments.results import RunResult
+from repro.experiments.specs import ExperimentSpec, ScenarioSpec
+
+
+def build_scenario(sspec: ScenarioSpec, *, _ds_cache: Optional[dict] = None):
+    """Materialize one grid cell: a ``VFLScenario`` for 2 parties or a
+    ``VFLScenarioK`` for K > 2.  ``_ds_cache`` (dict) reuses generated
+    datasets across cells of the same sweep."""
+    cache_key = (sspec.dataset, sspec.seed)
+    if _ds_cache is not None and cache_key in _ds_cache:
+        ds = _ds_cache[cache_key]
+    else:
+        ds = make_dataset(sspec.dataset, seed=sspec.seed)
+        if _ds_cache is not None:
+            _ds_cache[cache_key] = ds
+    n_aligned = sspec.resolve_aligned(len(ds.x))
+    if sspec.n_parties == 2:
+        return make_scenario(ds, n_active_features=sspec.n_active_features,
+                             n_aligned=n_aligned, seed=sspec.seed)
+    from repro.core.multiparty import make_scenario_k
+    return make_scenario_k(ds, n_parties=sspec.n_parties,
+                           n_active_features=sspec.n_active_features,
+                           n_aligned=n_aligned, seed=sspec.seed)
+
+
+def _validate(spec: ExperimentSpec) -> None:
+    if not spec.methods:
+        raise ValueError(f"ExperimentSpec {spec.name!r} has no methods")
+    if any(k < 2 for k in spec.n_parties):
+        raise ValueError(f"n_parties must all be >= 2, got "
+                         f"{list(spec.n_parties)}")
+    max_k = max(spec.n_parties, default=2)
+    seen_labels = set()
+    for m in spec.methods:
+        entry = get_method(m.method)       # raises on unknown names
+        if max_k > 2 and not entry.supports_multiparty:
+            raise ValueError(
+                f"method {m.method!r} supports only 2-party scenarios but "
+                f"the grid includes n_parties={max_k}")
+        if m.row_label in seen_labels:
+            raise ValueError(
+                f"duplicate method label {m.row_label!r}: give each "
+                f"MethodSpec variant a distinct label= so result rows "
+                f"stay distinguishable")
+        seen_labels.add(m.row_label)
+        if entry.accepts is not None:
+            unknown = set(spec.overrides) | set(m.params)
+            unknown -= entry.accepts
+            if unknown:
+                raise ValueError(
+                    f"method {m.row_label!r} does not accept params "
+                    f"{sorted(unknown)}; accepted: "
+                    f"{sorted(entry.accepts)}")
+
+
+def sweep(spec: ExperimentSpec, *,
+          progress: Optional[Callable[[str], None]] = None
+          ) -> List[RunResult]:
+    """Run the whole experiment; one ``RunResult`` per (cell, method).
+
+    Every result's ``scenario`` dict carries the resolved grid coordinates
+    and its ``method`` carries the spec's row label, so the output is
+    self-describing without the spec in hand."""
+    _validate(spec)
+    ds_cache: dict = {}
+    results: List[RunResult] = []
+    for sspec in spec.scenarios():
+        scenario = build_scenario(sspec, _ds_cache=ds_cache)
+        coords = {
+            "dataset": sspec.dataset,
+            "n_aligned": scenario.n_aligned,
+            "n_parties": sspec.n_parties,
+            "n_active_features": sspec.n_active_features,
+        }
+        for m in spec.methods:
+            entry = get_method(m.method)
+            params = {**spec.overrides, **m.params}
+            r = entry.fn(scenario, replace(m, params=params),
+                         seed=sspec.seed)
+            r.method = m.row_label
+            r.seed = sspec.seed
+            r.scenario = dict(coords)
+            results.append(r)
+            if progress is not None:
+                progress(f"{spec.name}: {m.row_label} "
+                         f"al={coords['n_aligned']} K={coords['n_parties']} "
+                         f"seed={sspec.seed} -> "
+                         + " ".join(f"{k}={v:.4f}"
+                                    for k, v in r.metrics.items()))
+    return results
+
+
+def tidy(results: List[RunResult]) -> List[dict]:
+    """Flatten results into tidy JSON-ready rows (one per run)."""
+    return [r.to_record() for r in results]

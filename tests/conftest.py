@@ -28,8 +28,15 @@ def pytest_collection_modifyitems(config, items):
             item.add_marker(skip)
 
 
-@pytest.fixture
-def quick_epochs(request) -> int:
+@pytest.fixture(scope="session")
+def quick_epochs_module(request) -> int:
     """max_epochs budget for trained-to-convergence assertions: generous
-    under --runslow, small in the default quick path."""
+    under --runslow, small in the default quick path.  Session-scoped so
+    module-scoped fixtures (e.g. a sweep shared by several tests) can
+    depend on it."""
     return 60 if request.config.getoption("--runslow") else 12
+
+
+@pytest.fixture
+def quick_epochs(quick_epochs_module) -> int:
+    return quick_epochs_module

@@ -182,9 +182,14 @@ def test_apcvfl_end_to_end(tiny_scenario, quick_epochs):
     r = pipeline.run_apcvfl(tiny_scenario, max_epochs=quick_epochs)
     assert r.rounds == 1                       # the headline claim
     # measured exchange == analytic Eq. 6 footprint (+ PSI hashes)
-    data_bytes = [b for w, b in r.channel.log if w.startswith("step1")]
-    assert sum(data_bytes) == comm.apcvfl_footprint_bytes(
+    assert r.comm["by_stage"]["step1"] == comm.apcvfl_footprint_bytes(
         tiny_scenario.n_aligned)
+    # the one data exchange is uplink (passive -> active): the channel's
+    # uplink total is step1 plus the PSI reply hashes
+    psi_reply = [t.nbytes for t in r.channel.log
+                 if t.what == "psi/hashes_b"]
+    assert r.comm["uplink_bytes"] == (r.comm["by_stage"]["step1"]
+                                      + sum(psi_reply))
     assert 0.0 <= r.metrics["accuracy"] <= 1.0
     assert r.z_dim == 256                      # M3 == M2 (Table 3)
 
@@ -198,7 +203,7 @@ def test_apcvfl_beats_local_with_converged_training(tiny_scenario,
     joint = pipeline.run_apcvfl_aligned_only(tiny_scenario,
                                              max_epochs=quick_epochs,
                                              test_size=30)
-    assert joint["metrics"]["accuracy"] > local["accuracy"] - 0.05
+    assert joint.metrics["accuracy"] > local["accuracy"] - 0.05
 
 
 @pytest.mark.slow

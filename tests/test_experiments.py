@@ -1,0 +1,265 @@
+"""Tests for the declarative experiment API: spec serialization, registry
+dispatch, sweep determinism, the uniform-RunResult acceptance path, the
+refactor regression (spec-driven apcvfl == direct call), and the measured
+vs analytic communication cross-check."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import comm, pipeline, splitnn, vfedtrans
+from repro.data.synthetic import make_dataset
+from repro.data.vertical import make_scenario
+from repro.experiments import (ExperimentSpec, MethodSpec, RunResult,
+                               ScenarioSpec, available_methods,
+                               build_scenario, get_method, sweep, tidy)
+
+
+# ---------------------------------------------------------------------------
+# spec serialization
+# ---------------------------------------------------------------------------
+
+def test_spec_json_round_trip():
+    spec = ExperimentSpec(
+        name="rt", dataset="credit", aligned=(5000, 0.25),
+        n_parties=(2, 3), n_active_features=4, seeds=(0, 1, 2),
+        methods=(MethodSpec("local"),
+                 MethodSpec("apcvfl", label="ablation",
+                            params={"ablation": True, "lam": 0.5})),
+        overrides={"max_epochs": 7})
+    back = ExperimentSpec.from_json(spec.to_json())
+    assert back == spec
+    assert isinstance(back.aligned, tuple)
+    assert isinstance(back.methods[1], MethodSpec)
+    assert back.methods[1].params == {"ablation": True, "lam": 0.5}
+
+
+def test_spec_from_dict_rejects_unknown_keys():
+    with pytest.raises(ValueError, match="unknown keys"):
+        ExperimentSpec.from_dict({"name": "x", "methdos": []})
+    with pytest.raises(ValueError, match="unknown keys"):
+        MethodSpec.from_dict({"method": "local", "prams": {}})
+
+
+def test_method_string_sugar_and_frozen():
+    spec = ExperimentSpec.from_dict({"name": "s", "methods": ["local"]})
+    assert spec.methods == (MethodSpec("local"),)
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        spec.name = "other"
+
+
+def test_scenario_spec_aligned_fraction():
+    s = ScenarioSpec(dataset="bcw", n_aligned=0.5)
+    assert s.resolve_aligned(500) == 250
+    assert ScenarioSpec(dataset="bcw", n_aligned=120).resolve_aligned(500) \
+        == 120
+
+
+# ---------------------------------------------------------------------------
+# registry dispatch
+# ---------------------------------------------------------------------------
+
+def test_registry_has_builtin_methods():
+    assert {"local", "apcvfl", "apcvfl_aligned_only", "splitnn",
+            "vfedtrans"} <= set(available_methods())
+
+
+def test_unknown_method_raises_with_registered_names():
+    with pytest.raises(KeyError, match="registered methods:.*apcvfl"):
+        get_method("no_such_method")
+
+
+def test_sweep_validates_before_running():
+    bad = ExperimentSpec(name="bad", methods=(MethodSpec("nope"),))
+    with pytest.raises(KeyError, match="unknown method"):
+        sweep(bad)
+    k3 = ExperimentSpec(name="k3", n_parties=(3,),
+                        methods=(MethodSpec("splitnn"),))
+    with pytest.raises(ValueError, match="2-party"):
+        sweep(k3)
+    with pytest.raises(ValueError, match="no methods"):
+        sweep(ExperimentSpec(name="empty"))
+    with pytest.raises(ValueError, match="n_parties must all be >= 2"):
+        sweep(ExperimentSpec(name="k1", n_parties=(1,),
+                             methods=(MethodSpec("local"),)))
+    dup = ExperimentSpec(name="dup",
+                         methods=(MethodSpec("apcvfl"),
+                                  MethodSpec("apcvfl",
+                                             params={"lam": 0.5})))
+    with pytest.raises(ValueError, match="duplicate method label"):
+        sweep(dup)
+    # param names are checked eagerly against each runner's signature:
+    # a typo'd param or an override one method can't take fails BEFORE
+    # any scenario is built or model trained
+    typo = ExperimentSpec(name="typo",
+                          methods=(MethodSpec("apcvfl",
+                                              params={"lamda": 0.5}),))
+    with pytest.raises(ValueError, match="does not accept params"):
+        sweep(typo)
+    bad_override = ExperimentSpec(name="bo",
+                                  methods=(MethodSpec("apcvfl"),
+                                           MethodSpec("splitnn")),
+                                  overrides={"lam": 0.01})
+    with pytest.raises(ValueError, match="'splitnn' does not accept"):
+        sweep(bad_override)
+
+
+def test_apcvfl_k_signature_matches_2party():
+    """The apcvfl adapter dispatches one param set to run_apcvfl (K=2) or
+    run_apcvfl_k (K>2): their keyword surfaces must stay identical, since
+    eager validation checks against the 2-party signature."""
+    import inspect
+
+    from repro.core.multiparty import run_apcvfl_k
+
+    def kwargs_of(fn):
+        return {p.name for p in
+                list(inspect.signature(fn).parameters.values())[1:]}
+
+    assert kwargs_of(pipeline.run_apcvfl) == kwargs_of(run_apcvfl_k)
+
+
+def test_kparty_grid_runs_apcvfl_variants():
+    """K>2 cells run through the same spec path, including the ablation
+    variant (regression: run_apcvfl_k used to lack the ablation kwarg, so
+    a K-party ablation grid crashed mid-sweep)."""
+    spec = ExperimentSpec(
+        name="k3", dataset="bcw", aligned=(100,), n_parties=(3,), seeds=(0,),
+        methods=(MethodSpec("local"), MethodSpec("apcvfl"),
+                 MethodSpec("apcvfl", label="ablation",
+                            params={"ablation": True})),
+        overrides={"max_epochs": 2})
+    results = sweep(spec)
+    assert [r.scenario["n_parties"] for r in results] == [3, 3, 3]
+    full = next(r for r in results if r.method == "apcvfl")
+    abl = next(r for r in results if r.method == "ablation")
+    assert len(full.channels) == 2               # one link per passive
+    assert full.rounds == 1 and abl.rounds == 0  # ablation: no exchange
+    assert abl.comm["by_stage"].keys() == {"psi"}
+    assert full.z_dim == abl.z_dim == 256
+
+
+# ---------------------------------------------------------------------------
+# the acceptance path: one sweep, every method, uniform records
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def smoke_results(quick_epochs_module):
+    from repro.launch.experiment import smoke_spec
+    spec = dataclasses.replace(
+        smoke_spec(), overrides={"max_epochs": quick_epochs_module})
+    return spec, sweep(spec)
+
+
+def test_smoke_spec_uniform_runresults(smoke_results):
+    spec, results = smoke_results
+    assert len(results) == len(spec.methods)
+    labels = [r.method for r in results]
+    assert set(labels) >= {"local", "apcvfl", "splitnn", "vfedtrans"}
+    for r in results:
+        assert isinstance(r, RunResult)
+        assert 0.0 <= r.metrics["accuracy"] <= 1.0
+        assert set(r.comm) == {"total_bytes", "total_mb", "transfers",
+                               "uplink_bytes", "downlink_bytes", "by_stage"}
+        assert r.scenario["dataset"] == "bcw"
+        assert r.scenario["n_aligned"] == 120
+    rec_keys = [set(rec) for rec in tidy(results)]
+    assert all(k == rec_keys[0] for k in rec_keys)   # tidy: same columns
+
+
+def test_sweep_reuses_scenario_across_methods(smoke_results):
+    """All methods of one grid cell see the SAME partition: equal aligned
+    rows and equal PSI traffic on every method that runs PSI."""
+    _, results = smoke_results
+    psi_bytes = {r.method: r.comm["by_stage"].get("psi")
+                 for r in results if r.channels}
+    vals = {v for v in psi_bytes.values() if v is not None}
+    assert len(vals) == 1, psi_bytes
+
+
+def test_apcvfl_via_spec_matches_direct_call(smoke_results):
+    """Refactor regression: the registry/spec path is the SAME computation
+    as the pre-refactor direct call — identical metrics at equal seeds."""
+    spec, results = smoke_results
+    via_spec = next(r for r in results if r.method == "apcvfl")
+    sc = build_scenario(ScenarioSpec(dataset="bcw", n_aligned=120,
+                                     n_active_features=5, seed=0))
+    direct = pipeline.run_apcvfl(sc, seed=0,
+                                 max_epochs=spec.overrides["max_epochs"])
+    for k, v in direct.metrics.items():
+        assert abs(via_spec.metrics[k] - v) < 1e-9
+    assert via_spec.comm == direct.comm
+
+
+def test_sweep_seed_determinism():
+    spec = ExperimentSpec(
+        name="det", dataset="bcw", aligned=(100,), seeds=(0, 1),
+        methods=(MethodSpec("local"), MethodSpec("apcvfl")),
+        overrides={"max_epochs": 2})
+    a = tidy(sweep(spec))
+    b = tidy(sweep(spec))
+    assert a == b
+    # different seeds produce different partitions -> different rows
+    assert a[0]["seed"] == 0 and a[2]["seed"] == 1
+    assert a[0] != dict(a[2], seed=0)
+
+
+# ---------------------------------------------------------------------------
+# measured channel vs analytic Appendix-E footprints
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def cross_check_scenario():
+    ds = make_dataset("bcw", seed=5)
+    return make_scenario(ds, n_active_features=5, n_aligned=150, seed=5)
+
+
+def test_splitnn_channel_matches_analytic_footprint(cross_check_scenario):
+    r = splitnn.run_splitnn(cross_check_scenario, max_epochs=3, test_size=50,
+                            seed=5)
+    epochs = r.epochs["splitnn"]
+    n_tr = 150 - 50
+    want = comm.splitnn_footprint_bytes(epochs, n_tr, batch_size=128)
+    assert r.comm["by_stage"]["train"] == want
+    # forward embeddings up, gradients down — exactly Eq. 7 / Eq. 8
+    by_what = {t.what: t for t in r.channel.log}
+    fwd = by_what["train/forward_embeddings"]
+    bwd = by_what["train/backward_gradients"]
+    assert fwd.nbytes == comm.splitnn_forward_bytes(epochs, n_tr)
+    assert fwd.direction == "uplink"
+    assert bwd.nbytes == comm.splitnn_backprop_bytes(epochs, n_tr, 128)
+    assert bwd.direction == "downlink"
+    assert r.comm["uplink_bytes"] == (fwd.nbytes
+                                      + by_what["psi/hashes_b"].nbytes)
+    assert r.comm["downlink_bytes"] == (bwd.nbytes
+                                        + by_what["psi/hashes_a"].nbytes)
+    assert r.rounds == comm.splitnn_rounds(epochs, n_tr, 128)
+
+
+def test_vfedtrans_channel_matches_analytic_footprint(cross_check_scenario):
+    sc = cross_check_scenario
+    r = vfedtrans.run_vfedtrans(sc, max_epochs=2, seed=5)
+    x_t = sc.active.x.shape[1]
+    x_d = sc.passive.x.shape[1]
+    want = comm.vfedtrans_footprint_bytes(sc.n_aligned, x_t, x_d)
+    assert r.comm["by_stage"]["fedsvd"] == want
+    assert r.rounds == comm.VFEDTRANS_ROUNDS
+    assert r.z_dim == x_t + x_d              # the FedSVD dim constraint
+
+
+def test_channel_summary_directions_and_stages():
+    ch = comm.Channel()
+    ch.send("psi/hashes_a", 100, direction="downlink")
+    ch.send("psi/hashes_b", 80, direction="uplink")
+    ch.send_array("step1/Z", np.zeros((10, 4), np.float32),
+                  direction="uplink")
+    s = ch.summary()
+    assert s["total_bytes"] == 100 + 80 + 160
+    assert s["uplink_bytes"] == 80 + 160
+    assert s["downlink_bytes"] == 100
+    assert s["by_stage"] == {"psi": 180, "step1": 160}
+    assert s["transfers"] == 3
+    # aggregation across links sums bytes and merges stages
+    agg = comm.summarize([ch, ch])
+    assert agg["total_bytes"] == 2 * s["total_bytes"]
+    assert agg["by_stage"]["psi"] == 360

@@ -22,7 +22,7 @@ def test_multiparty_k3_single_round_per_link():
     assert total == ds.x.shape[1]
     r = run_apcvfl_k(sc, max_epochs=6)
     for ch in r.channels:
-        data = [w for w, _ in ch.log if w.startswith("step1")]
+        data = [t for t in ch.log if t.stage == "step1"]
         assert len(data) == 1          # one exchange per passive link
     assert r.z_dim == 256
     assert 0 <= r.metrics["accuracy"] <= 1
@@ -42,7 +42,7 @@ def test_multiparty_psi_charges_full_active_upload():
                          n_aligned=100, seed=3)
     common, channels = align_k(sc.active.ids, [p.ids for p in sc.passives])
     for ch, p in zip(channels, sc.passives):
-        by_name = dict(ch.log)
+        by_name = {t.what: t.nbytes for t in ch.log}
         assert by_name["psi/hashes_a"] == len(sc.active.ids) * 32
         assert by_name["psi/hashes_b"] == len(p.ids) * 32
     # alignment itself is the global intersection: common ids at every party

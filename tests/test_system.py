@@ -26,9 +26,10 @@ def test_single_communication_round(scenario):
     size follows Eq. 6 exactly."""
     r = pipeline.run_apcvfl(scenario, max_epochs=8)
     assert r.rounds == 1
-    data = [(w, b) for w, b in r.channel.log if not w.startswith("psi")]
+    data = [t for t in r.channel.log if t.stage != "psi"]
     assert len(data) == 1
-    assert data[0][1] == comm.apcvfl_footprint_bytes(scenario.n_aligned)
+    assert data[0].nbytes == comm.apcvfl_footprint_bytes(scenario.n_aligned)
+    assert data[0].direction == "uplink"       # passive -> active
 
 
 def test_active_party_inference_is_independent(scenario):
