@@ -15,18 +15,24 @@ one dispatch + one host sync per epoch total) against K sequential
 K in {2, 4, 8} with uneven per-party feature widths (exercising the
 padded-stack layout).
 
-Sweep mode (``--sweep``) times the declarative experiment harness: the
-built-in smoke ``ExperimentSpec`` through ``repro.experiments.sweep`` —
-per-method wall time for the whole protocol (PSI + training + CV), i.e.
-the end-to-end cost one sweep cell pays per method.
+Sweep mode (``--sweep``) benchmarks the replica-lane sweep engine: one
+grid cell x S seed replicas of the full APC-VFL protocol, replicated
+(every stage S stacked lanes of one vmapped scan, via
+``run_apcvfl_replicated``) vs sequential (S independent protocol runs),
+plus the per-method wall time of the smoke spec.  Writes a
+machine-readable ``BENCH_sweep.json`` (wall-clock per path, engine
+steps/s, per-stage lane occupancy) so the perf trajectory accrues across
+PRs; CI uploads it as an artifact.
 
 Run:  PYTHONPATH=src python benchmarks/trainbench.py [--rows 4096]
       [--features 30] [--epochs 20] [--batches 32,64,128] [--csv]
-      [--kparty] [--ks 2,4,8] [--sweep]
+      [--kparty] [--ks 2,4,8] [--sweep] [--seeds 5]
+      [--out BENCH_sweep.json]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -114,27 +120,120 @@ def run_kparty(rows: int = 2048, features: int = 24, epochs: int = 10,
     return rows_out
 
 
-def run_sweep(epochs: int = 5, csv: bool = True) -> list:
-    """Per-method wall time of one sweep cell on the built-in smoke spec
-    (whole protocol: PSI + all training stages + k-fold CV).  ``epochs``
-    caps every method's training budget; use a small value (<= 5) unless
-    you mean to benchmark near-converged runs.
+def _cell_steps(epochs: dict, stage_rows: dict, bs: int) -> int:
+    """Total engine steps one protocol run took, reconstructed from its
+    per-stage epoch counts and the engine's batching contract
+    (``n_batches = n_tr // bs`` after the shared lane-group clamp;
+    identical for the sequential and the replica-lane path at equal
+    shapes).  ``stage_rows``: stage -> (rows, lane_group) where stages in
+    one group share the batch-size clamp."""
+    def n_tr(n):
+        return n - max(int(n * 0.1), 1)
 
-    The scenario is built ONCE outside the timed region (as in a real
-    sweep cell, where all methods share it), so each row measures only
-    the method's own protocol cost."""
+    groups: dict = {}
+    for n, g in stage_rows.values():
+        groups.setdefault(g, []).append(n_tr(n))
+    bs_g = {g: max(min([bs] + v), 1) for g, v in groups.items()}
+    return sum(epochs.get(st, 0) * (n_tr(n) // bs_g[g])
+               for st, (n, g) in stage_rows.items())
+
+
+def _stage_rows(method: str, scenario) -> dict:
+    n_a, n_p = len(scenario.active.x), len(scenario.passive.x)
+    n_al = scenario.n_aligned
+    if method == "apcvfl":
+        return {"g1_active": (n_a, "g1"), "g1_passive": (n_p, "g1"),
+                "g2": (n_al, "g2"), "g3": (n_a, "g3")}
+    return {"g1_active": (n_al, "g1"), "g1_passive": (n_al, "g1"),
+            "g2": (n_al, "g2")}              # aligned-only variant
+
+
+def _lane_occupancy(results) -> dict:
+    """Per-stage lane occupancy of a replica group: mean over lanes of
+    (own epochs / slowest lane's epochs) — 1.0 means no lane idled behind
+    a slower sibling, lower means early-stopped lanes spent epochs
+    frozen-stepping."""
+    out = {}
+    for stage, lanes in (("g1", ["g1_active", "g1_passive"]),
+                         ("g2", ["g2"]), ("g3", ["g3"])):
+        eps = [r.epochs[k] for r in results for k in lanes
+               if k in r.epochs]
+        if eps:
+            out[stage] = float(np.mean(eps) / max(eps))
+    return out
+
+
+def run_sweep(epochs: int = 30, seeds: int = 5, out_json="BENCH_sweep.json",
+              csv: bool = True) -> dict:
+    """Replica-lane sweep engine vs sequential per-seed execution: one
+    grid cell x ``seeds`` replicas for each method with a replicated
+    runner (full apcvfl protocol + the aligned-only adaptation), plus the
+    smoke spec's per-method wall times; writes ``out_json``.
+
+    ``bs=32`` keeps the stages in the dispatch-bound regime the lane
+    engine targets (PR 2's K-party setting).  Expect the aligned-only
+    grid to show the larger win: both of its stages (g1, g2) batch well,
+    while full apcvfl is diluted by the compute-bound g3 and the
+    memory-bound k-fold probe, which lane-batching cannot speed up on
+    CPU."""
     from dataclasses import replace
 
-    from repro.experiments import build_scenario, get_method, sweep
+    from repro.experiments import (ExperimentSpec, MethodSpec,
+                                   build_scenario, get_method, sweep)
     from repro.launch.experiment import smoke_spec
 
-    spec = replace(smoke_spec(), overrides={"max_epochs": epochs})
-    sweep(spec)                   # validate + warm all compile caches
-    scenario = build_scenario(next(iter(spec.scenarios())))
-    seed = spec.seeds[0]
+    # --- replicated vs sequential, per replicable method ------------------
+    bs = 32
+    replicas = {}
+    grids = (MethodSpec("apcvfl"),
+             MethodSpec("apcvfl_aligned_only", params={"test_size": 40}))
+    for m in grids:
+        spec = ExperimentSpec(
+            name=f"bench-{m.method}", dataset="bcw", aligned=(150,),
+            seeds=tuple(range(seeds)), methods=(m,),
+            overrides={"max_epochs": epochs, "patience": epochs,
+                       "batch_size": bs})
+        seq_spec = replace(spec, replicate=False)
+        for s in (seq_spec, spec):        # warm both compile caches
+            sweep(s)
+        t0 = time.time()
+        seq_res = sweep(seq_spec)
+        t_seq = time.time() - t0
+        t0 = time.time()
+        rep_res = sweep(spec)
+        t_rep = time.time() - t0
+
+        cell = build_scenario(next(iter(spec.scenarios())))
+        steps = sum(_cell_steps(r.epochs, _stage_rows(m.method, cell), bs)
+                    for r in seq_res)
+        bench = {
+            "name": f"trainbench/sweep/{m.method}/S{seeds}/e{epochs}",
+            "grid": {"dataset": "bcw", "aligned": 150, "seeds": seeds,
+                     "method": m.method, "max_epochs": epochs,
+                     "batch_size": bs},
+            "total_steps": steps,
+            "sequential_wall_s": round(t_seq, 3),
+            "replicated_wall_s": round(t_rep, 3),
+            "speedup": round(t_seq / t_rep, 3),
+            "sequential_steps_per_s": round(steps / t_seq, 1),
+            "replicated_steps_per_s": round(steps / t_rep, 1),
+            "lane_occupancy": _lane_occupancy(rep_res),
+        }
+        replicas[m.method] = bench
+        if csv:
+            print(f"{bench['name']},{1e6 * t_rep / max(steps, 1):.0f},"
+                  f"replicated={bench['replicated_steps_per_s']:.0f}sps|"
+                  f"sequential={bench['sequential_steps_per_s']:.0f}sps|"
+                  f"speedup={bench['speedup']:.2f}x", flush=True)
+
+    # --- per-method wall time of one smoke-spec cell ----------------------
+    mspec_all = replace(smoke_spec(), overrides={"max_epochs": epochs})
+    sweep(mspec_all)              # validate + warm remaining compiles
+    scenario = build_scenario(next(iter(mspec_all.scenarios())))
+    seed = mspec_all.seeds[0]
     rows_out = []
-    for m in spec.methods:
-        mspec = replace(m, params={**spec.overrides, **m.params})
+    for m in mspec_all.methods:
+        mspec = replace(m, params={**mspec_all.overrides, **m.params})
         entry = get_method(m.method)
         t0 = time.time()
         result = entry.fn(scenario, mspec, seed=seed)
@@ -146,7 +245,14 @@ def run_sweep(epochs: int = 5, csv: bool = True) -> list:
             print(f"{rec['name']},{us:.0f},"
                   f"wall={rec['wall_s']:.2f}s|acc={rec['accuracy']:.4f}",
                   flush=True)
-    return rows_out
+
+    payload = {"replicas": replicas, "per_method": rows_out}
+    if out_json:
+        with open(out_json, "w") as fh:
+            json.dump(payload, fh, indent=1)
+        if csv:
+            print(f"# wrote {out_json}", flush=True)
+    return payload
 
 
 def main() -> None:
@@ -154,18 +260,23 @@ def main() -> None:
     ap.add_argument("--rows", type=int, default=4096)
     ap.add_argument("--features", type=int, default=30)
     ap.add_argument("--epochs", type=int, default=None,
-                    help="training budget (default: 20 for the engine "
-                         "modes, 5 for --sweep)")
+                    help="training budget (default: 20; 30 for --sweep)")
     ap.add_argument("--batches", default="32,64,128")
     ap.add_argument("--kparty", action="store_true",
                     help="run the K-party train_many vs sequential sweep")
     ap.add_argument("--ks", default="2,4,8")
     ap.add_argument("--sweep", action="store_true",
-                    help="time the declarative experiment harness "
-                         "(smoke spec, per-method wall time)")
+                    help="benchmark the replica-lane sweep engine "
+                         "(replicated vs sequential seeds) and the "
+                         "per-method harness; writes --out")
+    ap.add_argument("--seeds", type=int, default=5,
+                    help="seed replicas for the --sweep benchmark")
+    ap.add_argument("--out", default="BENCH_sweep.json",
+                    help="--sweep JSON output path ('' to skip)")
     args = ap.parse_args()
     if args.sweep:
-        run_sweep(epochs=args.epochs if args.epochs is not None else 5)
+        run_sweep(epochs=args.epochs if args.epochs is not None else 30,
+                  seeds=args.seeds, out_json=args.out)
     elif args.kparty:
         run_kparty(rows=args.rows, features=args.features,
                    epochs=args.epochs if args.epochs is not None else 20,

@@ -1,5 +1,17 @@
 """Logistic-regression probe (paper Sec. 5 "Models": linear probing) +
-k-fold cross-validation and F1/accuracy metrics (micro/macro/weighted)."""
+k-fold cross-validation and F1/accuracy metrics (micro/macro/weighted).
+
+``kfold_cv`` treats the k folds as replica lanes: every fold's train split
+is padded to a common row count with zero-weight rows, and all k fits plus
+their test-fold predictions run as ONE vmapped ``lax.scan`` inside a
+single jitted call (``_fit_predict_folds``).  Uneven ``array_split``
+shapes used to force one recompile per distinct fold size; now there is
+exactly one compile per (n, d, k, n_classes) and one host sync for all
+predictions.  Zero-weight padding is exact, not approximate: the weighted
+mean over real rows equals the unweighted mean the per-fold path took, so
+gradients (and hence the fitted probes) match to float tolerance —
+``tests/test_replicas.py`` pins parity against a per-fold reference.
+"""
 from __future__ import annotations
 
 from functools import partial
@@ -28,6 +40,17 @@ def logreg_loss(params: dict, batch: dict) -> jax.Array:
     return jnp.mean(lse - gold) + l2
 
 
+def _weighted_logreg_loss(params, x, y, w) -> jax.Array:
+    """``logreg_loss`` with per-row weights: with 0/1 weights the weighted
+    mean over real rows equals the plain mean over those rows exactly, so
+    zero-weight padding rows are invisible to the gradients."""
+    logits = logreg_logits(params, x)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
+    l2 = 1e-4 * jnp.sum(jnp.square(params["w"]))
+    return jnp.sum((lse - gold) * w) / jnp.maximum(jnp.sum(w), 1.0) + l2
+
+
 @partial(jax.jit, static_argnames=("n_classes", "steps", "lr"))
 def fit_logreg(x, y, n_classes: int, steps: int = 300, lr: float = 0.1):
     """Full-batch Adam logistic regression (fast jit'd probe), on the same
@@ -47,6 +70,53 @@ def fit_logreg(x, y, n_classes: int, steps: int = 300, lr: float = 0.1):
     return params
 
 
+def _fold_fit_predict(x, y, tri, trw, tei, *, n_classes, steps, lr):
+    """One fold lane: weighted probe fit on ``x[tri]`` then predictions on
+    ``x[tei]`` — the body both vmapped fold runners share."""
+    opt = paper_adam(lr)
+    xi, yi = x[tri], y[tri]
+    params = {"w": jnp.zeros((x.shape[1], n_classes)),
+              "b": jnp.zeros((n_classes,))}
+
+    def step(carry, _):
+        p, s = carry
+        g = jax.grad(_weighted_logreg_loss)(p, xi, yi, trw)
+        p, s, _ = opt.update(g, s, p)
+        return (p, s), None
+
+    (params, _), _ = jax.lax.scan(step, (params, opt.init(params)), None,
+                                  length=steps)
+    return jnp.argmax(logreg_logits(params, x[tei]), axis=-1)
+
+
+@partial(jax.jit, static_argnames=("n_classes", "steps", "lr"))
+def _fit_predict_folds(x, y, tr_idx, tr_w, te_idx, *, n_classes: int,
+                       steps: int = 300, lr: float = 0.1):
+    """All k probe fits + test-fold predictions as one vmapped scan.
+
+    ``tr_idx``/``te_idx`` are (k, max_tr)/(k, max_te) row indices into
+    ``x`` (padded entries point at row 0), ``tr_w`` the matching 0/1 row
+    weights.  Returns (k, max_te) predicted labels; padded test slots are
+    sliced off by the host caller."""
+    fold = partial(_fold_fit_predict, x, y, n_classes=n_classes,
+                   steps=steps, lr=lr)
+    return jax.vmap(fold)(tr_idx, tr_w, te_idx)
+
+
+@partial(jax.jit, static_argnames=("n_classes", "steps", "lr"))
+def _fit_predict_folds_many(x, y, tr_idx, tr_w, te_idx, *, n_classes: int,
+                            steps: int = 300, lr: float = 0.1):
+    """S seeds x k folds of probe fits as one doubly-vmapped scan:
+    ``x``/``y`` carry a leading seed axis, the index arrays a leading
+    (S, k) pair.  Returns (S, k, max_te) predicted labels."""
+    def per_seed(xs, ys, tri, trw, tei):
+        fold = partial(_fold_fit_predict, xs, ys, n_classes=n_classes,
+                       steps=steps, lr=lr)
+        return jax.vmap(fold)(tri, trw, tei)
+
+    return jax.vmap(per_seed)(x, y, tr_idx, tr_w, te_idx)
+
+
 def predict(params: dict, x) -> np.ndarray:
     return np.asarray(jnp.argmax(logreg_logits(params, jnp.asarray(x)),
                                  axis=-1))
@@ -57,23 +127,24 @@ def predict(params: dict, x) -> np.ndarray:
 # ---------------------------------------------------------------------------
 
 def f1_scores(y_true: np.ndarray, y_pred: np.ndarray, n_classes: int) -> dict:
-    """Returns micro/macro/weighted F1 and accuracy."""
+    """Returns micro/macro/weighted F1 and accuracy.
+
+    One ``np.bincount`` confusion matrix instead of four full-array passes
+    per class; ``tests/test_replicas.py`` pins parity against the loop."""
     y_true = np.asarray(y_true)
     y_pred = np.asarray(y_pred)
-    tp = np.zeros(n_classes)
-    fp = np.zeros(n_classes)
-    fn = np.zeros(n_classes)
-    support = np.zeros(n_classes)
-    for c in range(n_classes):
-        tp[c] = np.sum((y_pred == c) & (y_true == c))
-        fp[c] = np.sum((y_pred == c) & (y_true != c))
-        fn[c] = np.sum((y_pred != c) & (y_true == c))
-        support[c] = np.sum(y_true == c)
+    cm = np.bincount(y_true * n_classes + y_pred,
+                     minlength=n_classes * n_classes)
+    cm = cm.reshape(n_classes, n_classes)        # rows: true, cols: pred
+    tp = np.diag(cm).astype(np.float64)
+    fp = cm.sum(axis=0) - tp
+    fn = cm.sum(axis=1) - tp
+    support = cm.sum(axis=1).astype(np.float64)
     denom = 2 * tp + fp + fn
     f1c = np.where(denom > 0, 2 * tp / np.maximum(denom, 1), 0.0)
     micro_d = 2 * tp.sum() + fp.sum() + fn.sum()
     return {
-        "accuracy": float(np.mean(y_true == y_pred)),
+        "accuracy": float(tp.sum() / max(len(y_true), 1)),
         "f1_micro": float(2 * tp.sum() / micro_d) if micro_d else 0.0,
         "f1_macro": float(np.mean(f1c)),
         "f1_weighted": float(np.sum(f1c * support) / max(support.sum(), 1)),
@@ -82,18 +153,70 @@ def f1_scores(y_true: np.ndarray, y_pred: np.ndarray, n_classes: int) -> dict:
     }
 
 
+def _fold_arrays(n: int, k: int, seed: int):
+    """The paper's fold assignment (seeded permutation + ``array_split``)
+    as padded index arrays: (k, max_tr) train indices + 0/1 weights
+    (padded slots gather row 0 at zero weight — inert) and (k, max_te)
+    test indices, plus the raw folds for host-side metric slicing."""
+    perm = np.random.RandomState(seed).permutation(n)
+    folds = np.array_split(perm, k)
+    te_lens = [len(f) for f in folds]
+    max_te = max(te_lens)
+    max_tr = n - min(te_lens)
+    tr_idx = np.zeros((k, max_tr), np.int32)
+    tr_w = np.zeros((k, max_tr), np.float32)
+    te_idx = np.zeros((k, max_te), np.int32)
+    for i in range(k):
+        tr = np.concatenate([folds[j] for j in range(k) if j != i])
+        tr_idx[i, :len(tr)] = tr
+        tr_w[i, :len(tr)] = 1.0
+        te_idx[i, :te_lens[i]] = folds[i]
+    return tr_idx, tr_w, te_idx, folds, te_lens
+
+
 def kfold_cv(x: np.ndarray, y: np.ndarray, n_classes: int, *, k: int = 10,
              seed: int = 0) -> dict:
-    """Paper evaluation: 10-fold CV of the logistic probe; mean metrics."""
-    n = len(x)
-    rng = np.random.RandomState(seed)
-    perm = rng.permutation(n)
-    folds = np.array_split(perm, k)
-    accs = []
-    for i in range(k):
-        te = folds[i]
-        tr = np.concatenate([folds[j] for j in range(k) if j != i])
-        params = fit_logreg(jnp.asarray(x[tr]), jnp.asarray(y[tr]), n_classes)
-        pred = predict(params, x[te])
-        accs.append(f1_scores(y[te], pred, n_classes))
+    """Paper evaluation: 10-fold CV of the logistic probe; mean metrics.
+
+    Fold assignment is the same ``array_split`` as always; the k fits run
+    as one vmapped jitted call over zero-weight-padded folds (module
+    docstring), with a single host sync for all predictions."""
+    x = np.asarray(x)
+    y = np.asarray(y)
+    tr_idx, tr_w, te_idx, folds, te_lens = _fold_arrays(len(x), k, seed)
+    preds = np.asarray(_fit_predict_folds(
+        jnp.asarray(x), jnp.asarray(y), jnp.asarray(tr_idx),
+        jnp.asarray(tr_w), jnp.asarray(te_idx), n_classes=n_classes))
+    accs = [f1_scores(y[folds[i]], preds[i, :te_lens[i]], n_classes)
+            for i in range(k)]
     return {k_: float(np.mean([a[k_] for a in accs])) for k_ in accs[0]}
+
+
+def kfold_cv_many(xs, ys, n_classes: int, *, k: int = 10, seeds) -> list:
+    """S independent k-fold CVs (one per seed, equal shapes) as ONE jitted
+    call: every (seed, fold) pair is a lane of a doubly-vmapped fit — the
+    replica-lane treatment of the evaluation stage.  On the 2-core CPU
+    container this measures at parity with S ``kfold_cv`` calls (the
+    probe is memory-bound), so ``pipeline.run_apcvfl_replicated``
+    deliberately does NOT use it; it is the drop-in for accelerator
+    backends where lane batching pays.  Returns one metrics dict per
+    seed, each matching ``kfold_cv(xs[i], ys[i], ..., seed=seeds[i])``
+    within lane-engine tolerance."""
+    seeds = list(seeds)
+    ys = [np.asarray(y) for y in ys]
+    x_s = jnp.stack([jnp.asarray(x) for x in xs])      # (S, n, d)
+    y_s = jnp.stack([jnp.asarray(y) for y in ys])
+    per_seed = [_fold_arrays(x_s.shape[1], k, s) for s in seeds]
+    preds = np.asarray(_fit_predict_folds_many(
+        x_s, y_s,
+        jnp.asarray(np.stack([p[0] for p in per_seed])),
+        jnp.asarray(np.stack([p[1] for p in per_seed])),
+        jnp.asarray(np.stack([p[2] for p in per_seed])),
+        n_classes=n_classes))                          # (S, k, max_te)
+    out = []
+    for si, (y, (_, _, _, folds, te_lens)) in enumerate(zip(ys, per_seed)):
+        accs = [f1_scores(y[folds[i]], preds[si, i, :te_lens[i]], n_classes)
+                for i in range(k)]
+        out.append({k_: float(np.mean([a[k_] for a in accs]))
+                    for k_ in accs[0]})
+    return out

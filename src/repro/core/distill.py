@@ -44,3 +44,30 @@ def make_loss(lam: float = 0.01, kind: str = "mse", use_kernel: bool = False):
     loss.cache_key = ("repro.core.distill.make_loss", float(lam), str(kind),
                       bool(use_kernel))
     return loss
+
+
+def make_lanes_loss(lam: float = 0.01, kind: str = "mse"):
+    """Eq. 5 for replica-lane batches (``training.train_lanes``): consumes
+    the engine's ``mask`` (real-feature columns) and ``row_w`` (real-row
+    weights), so g3 lanes of different row/feature shapes can share one
+    vmapped scan.  With 0/1 weights and no padding this equals
+    ``make_loss(lam, kind)`` exactly (the weighted means reduce to plain
+    means).  Lanes must share the latent width (true for every Table-3
+    architecture: M3 = 256) — the latent axis is never padded."""
+    def loss(params, batch):
+        x, z_t, al = batch["x"], batch["z_teacher"], batch["aligned"]
+        fm, rw = batch["mask"], batch["row_w"]
+        z = ae.encode(params, x)
+        x_hat = ae.mlp_apply(params["dec"], z)
+        se = jnp.square(x - x_hat) * fm
+        rec = jnp.sum(se, axis=-1) / jnp.maximum(jnp.sum(fm), 1.0)   # (B,)
+        diff = z - z_t
+        if kind == "mae":
+            dis = jnp.mean(jnp.abs(diff), axis=-1)
+        else:
+            dis = jnp.mean(jnp.square(diff), axis=-1)
+        per_row = rec + lam * dis * al.astype(rec.dtype)
+        return jnp.sum(per_row * rw) / jnp.maximum(jnp.sum(rw), 1.0)
+    loss.cache_key = ("repro.core.distill.make_lanes_loss", float(lam),
+                      str(kind))
+    return loss

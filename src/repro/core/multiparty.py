@@ -15,14 +15,17 @@ already-shrunk running intersection, which would both leak information
 about the other links and under-count bytes — so total PSI traffic is
 monotone in K.
 
-All K g1 stages (active + passives) train together through
-``training.train_many``: per-party params and datasets are zero-padded to
-common shapes, stacked along a leading party axis, and every epoch runs as
-ONE vmapped ``lax.scan`` inside a single jitted call — one upload, one
-compile, one host sync per epoch for all parties.  Parties that
-early-stop keep stepping on frozen params behind a per-party mask (the
-masked-select twin of ``distill.make_loss``), so the batch shape stays
-static; see the ``core.training`` module docstring for the layout.
+All K g1 stages (active + passives) train together through the replica-
+lane engine (``training.train_lanes``, one lane per party): per-party
+params and datasets are zero-padded to common shapes, stacked along a
+leading lane axis, and every epoch runs as ONE vmapped ``lax.scan`` inside
+a single jitted call — one upload, one compile, one host sync per epoch
+for all parties.  Parties that early-stop keep stepping on frozen params
+behind a per-lane mask (the masked-select twin of ``distill.make_loss``),
+so the batch shape stays static; see the ``core.training`` module
+docstring for the layout.  Stage handoffs stay device-resident (latents
+feed g2/g3 as jax arrays; channel accounting reads only shapes), matching
+``core.pipeline``.
 
 Hyperparameter defaults come from ``configs.apcvfl_paper.TABULAR``;
 ``run_apcvfl_k`` returns the unified ``experiments.results.RunResult``
@@ -132,39 +135,39 @@ def run_apcvfl_k(sc: VFLScenarioK, *, lam: float = HP.lam,
     xa = sc.active.x
 
     if not ablation:
-        # --- step 1 at every party: ONE batched vmapped run for all K g1s --
-        specs = [training.PartySpec(
+        # --- step 1 at every party: ONE vmapped run, one lane per g1 -------
+        specs = [training.LaneSpec(
             ae.init_autoencoder(keys[0],
                                 ae.table3_encoder("g1_active", xa.shape[1])),
             {"x": xa}, seed)]
         for i, p in enumerate(sc.passives):
-            specs.append(training.PartySpec(
+            specs.append(training.LaneSpec(
                 ae.init_autoencoder(keys[i + 1],
                                     ae.table3_encoder("g1_passive",
                                                       p.x.shape[1])),
                 {"x": p.x}, seed + i + 1))
-        results = training.train_many(specs, ae.masked_recon_loss,
-                                      **train_kw)
+        results = training.train_lanes(specs, ae.masked_recon_loss,
+                                       **train_kw)
         ra, r_ps = results[0], results[1:]
         epochs["g1_active"] = ra.epochs_run
-        za = np.asarray(ae.encode(ra.params, jnp.asarray(xa[idx_a])))
+        za = ae.encode(ra.params, jnp.asarray(xa[idx_a]))
 
         blocks = [za]
         for i, (p, idx_p, ch, rp) in enumerate(zip(sc.passives, idx_ps,
                                                    channels, r_ps)):
             epochs[f"g1_passive{i}"] = rp.epochs_run
-            zp = np.asarray(ae.encode(rp.params, jnp.asarray(p.x[idx_p])))
+            zp = ae.encode(rp.params, jnp.asarray(p.x[idx_p]))
             ch.send_array(f"step1/Z_passive{i}_aligned", zp)  # THE exchange
             blocks.append(zp)
 
         # --- step 2 at the active party -------------------------------------
-        zj = np.concatenate(blocks, axis=1).astype(np.float32)
+        zj = jnp.concatenate(blocks, axis=1).astype(jnp.float32)
         r2 = training.train(
             ae.init_autoencoder(keys[-2],
                                 ae.table3_encoder("g2", zj.shape[1])),
             {"x": zj}, ae.recon_loss, seed=seed + 100, **train_kw)
         epochs["g2"] = r2.epochs_run
-        zt_al = np.asarray(ae.encode(r2.params, jnp.asarray(zj)))
+        zt_al = ae.encode(r2.params, zj)
         m2 = zt_al.shape[1]
     else:
         m2 = ae.table3_encoder("g2", 1)[-1]
@@ -172,11 +175,11 @@ def run_apcvfl_k(sc: VFLScenarioK, *, lam: float = HP.lam,
 
     # --- steps 3-4 at the active party --------------------------------------
     n_a = len(xa)
-    z_teacher = np.zeros((n_a, m2), np.float32)
-    mask = np.zeros((n_a,), np.float32)
+    z_teacher = jnp.zeros((n_a, m2), jnp.float32)
+    mask = jnp.zeros((n_a,), jnp.float32)
     if not ablation:
-        z_teacher[idx_a] = zt_al
-        mask[idx_a] = 1.0
+        z_teacher = z_teacher.at[idx_a].set(zt_al)
+        mask = mask.at[idx_a].set(1.0)
     r3 = training.train(
         ae.init_autoencoder(keys[-1], ae.table3_encoder("g3", xa.shape[1])),
         {"x": xa, "z_teacher": z_teacher, "aligned": mask},
@@ -184,7 +187,7 @@ def run_apcvfl_k(sc: VFLScenarioK, *, lam: float = HP.lam,
         seed=seed + 200, **train_kw)
     epochs["g3"] = r3.epochs_run
 
-    z_all = np.asarray(ae.encode(r3.params, jnp.asarray(xa)))
+    z_all = ae.encode(r3.params, jnp.asarray(xa))
     metrics = clf.kfold_cv(z_all, sc.active.y, sc.n_classes, seed=seed)
     data_rounds = 0 if ablation else comm.APCVFL_ROUNDS
     return RunResult(method="apcvfl", metrics=metrics, rounds=data_rounds,

@@ -14,10 +14,22 @@ All stages train on the device-resident scan engine (``core.training``):
 each stage uploads its arrays once and runs whole epochs as a single jitted
 scan, and every ``distill.make_loss`` closure with equal hyperparameters
 reuses the g3 engine via its semantic cache key.  The two step-1 (g1)
-autoencoders train TOGETHER through ``training.train_many`` — params and
-data zero-padded to common shapes, stacked on a leading party axis, every
-epoch one vmapped scan — the same batched engine ``core.multiparty`` uses
-for K parties (this is the K=2 special case).
+autoencoders train TOGETHER through ``training.train_lanes`` — params and
+data zero-padded to common shapes, stacked on a leading lane axis, every
+epoch one vmapped scan — the same lane engine ``core.multiparty`` uses
+for K parties (this is the 2-lane special case).
+
+Stage handoffs are device-resident: encoder outputs feed the next stage as
+jax arrays (the lane engine gathers its train/val splits on device) and
+the channel accounting reads only shapes/dtypes, so the handoffs
+themselves add NO host round-trips — what remains is the engine's one
+early-stop sync per epoch and the final metrics evaluation
+(``clf.kfold_cv``, one sync for all folds).
+
+``run_apcvfl_replicated`` runs S seed replicates of one grid cell through
+every stage together: each stage becomes S (or 2S, for the two g1s) lanes
+of one ``training.train_lanes`` call, so a whole multi-seed sweep cell
+costs one compile and one host sync per epoch instead of S of each.
 
 Hyperparameter defaults come from ``configs.apcvfl_paper.TABULAR`` (the
 paper's Appendix-B settings); every entry point returns the unified
@@ -68,27 +80,29 @@ def run_apcvfl(sc: VFLScenario, *, lam: float = HP.lam, kind: str = HP.kind,
         wp = ae.table3_encoder("g1_passive", xp.shape[1])
         ae_a = ae.init_autoencoder(k1, wa)
         ae_p = ae.init_autoencoder(k2, wp)
-        ra, rp = training.train_many(
-            [training.PartySpec(ae_a, {"x": xa}, seed),
-             training.PartySpec(ae_p, {"x": xp}, seed + 1)],
+        ra, rp = training.train_lanes(
+            [training.LaneSpec(ae_a, {"x": xa}, seed),
+             training.LaneSpec(ae_p, {"x": xp}, seed + 1)],
             ae.masked_recon_loss, **train_kw)
         epochs["g1_active"], epochs["g1_passive"] = ra.epochs_run, rp.epochs_run
 
-        za_al = np.asarray(ae.encode(ra.params, jnp.asarray(xa[idx_a])))
-        zp_al = np.asarray(ae.encode(rp.params, jnp.asarray(xp[idx_p])))
+        # device-resident handoff: latents stay jax arrays end to end
+        za_al = ae.encode(ra.params, jnp.asarray(xa[idx_a]))
+        zp_al = ae.encode(rp.params, jnp.asarray(xp[idx_p]))
 
-        # THE single information exchange: passive -> active, aligned latents
+        # THE single information exchange: passive -> active, aligned
+        # latents (byte accounting reads only shape/dtype — no host sync)
         channel.send_array("step1/Z_passive_aligned", zp_al,
                            direction="uplink")
 
         # --- Step 2: aligned (joint) representation learning ---------------
-        zj = np.concatenate([za_al, zp_al], axis=1).astype(np.float32)
+        zj = jnp.concatenate([za_al, zp_al], axis=1).astype(jnp.float32)
         w2 = ae.table3_encoder("g2", zj.shape[1])
         ae_2 = ae.init_autoencoder(k3, w2)
         r2 = training.train(ae_2, {"x": zj}, ae.recon_loss, seed=seed + 2,
                             **train_kw)
         epochs["g2"] = r2.epochs_run
-        z_teacher_al = np.asarray(ae.encode(r2.params, jnp.asarray(zj)))
+        z_teacher_al = ae.encode(r2.params, zj)
         m2 = z_teacher_al.shape[1]
     else:
         m2 = ae.table3_encoder("g2", 1)[-1]
@@ -96,11 +110,11 @@ def run_apcvfl(sc: VFLScenario, *, lam: float = HP.lam, kind: str = HP.kind,
 
     # --- Step 3: knowledge distillation into g3 -----------------------------
     n_a = len(xa)
-    z_teacher = np.zeros((n_a, m2), np.float32)
-    mask = np.zeros((n_a,), np.float32)
+    z_teacher = jnp.zeros((n_a, m2), jnp.float32)
+    mask = jnp.zeros((n_a,), jnp.float32)
     if not ablation:
-        z_teacher[idx_a] = z_teacher_al
-        mask[idx_a] = 1.0
+        z_teacher = z_teacher.at[idx_a].set(z_teacher_al)
+        mask = mask.at[idx_a].set(1.0)
     w3 = ae.table3_encoder("g3", xa.shape[1])
     assert w3[-1] == m2, "M3 == M2: dimensional consistency (Sec. 4.3)"
     ae_3 = ae.init_autoencoder(k4, w3)
@@ -111,13 +125,152 @@ def run_apcvfl(sc: VFLScenario, *, lam: float = HP.lam, kind: str = HP.kind,
     epochs["g3"] = r3.epochs_run
 
     # --- Step 4: classifier on the enhanced dataset -------------------------
-    z_all = np.asarray(ae.encode(r3.params, jnp.asarray(xa)))
+    # the protocol's single host sync: kfold_cv pulls predictions once
+    z_all = ae.encode(r3.params, jnp.asarray(xa))
     metrics = clf.kfold_cv(z_all, sc.active.y, sc.n_classes, seed=seed)
 
     data_rounds = 0 if ablation else comm.APCVFL_ROUNDS
     return RunResult(method="apcvfl", metrics=metrics, rounds=data_rounds,
                      epochs=epochs, comm=channel.summary(), seed=seed,
                      z_dim=m2, params={"g3": r3.params}, channels=(channel,))
+
+
+# ---------------------------------------------------------------------------
+# replica-lane execution: all seeds of one grid cell per stage dispatch
+# ---------------------------------------------------------------------------
+
+def _normalize_replicas(fn_name: str, scenarios, seeds):
+    """Shared contract of the ``*_replicated`` entry points: int seeds,
+    one scenario broadcast to every seed or exactly one per seed."""
+    seeds = [int(s) for s in seeds]
+    S = len(seeds)
+    scs = ([scenarios] * S if isinstance(scenarios, VFLScenario)
+           else list(scenarios))
+    if len(scs) != S:
+        raise ValueError(f"{fn_name}: {len(scs)} scenarios for {S} seeds")
+    return scs, seeds
+
+
+def run_apcvfl_replicated(scenarios, *, seeds, lam: float = HP.lam,
+                          kind: str = HP.kind,
+                          batch_size: int = HP.batch_size,
+                          max_epochs: int = HP.max_epochs,
+                          patience: int = HP.patience, lr: float = HP.lr,
+                          use_kernel: bool = False,
+                          ablation: bool = False) -> list:
+    """Full protocol for S seed replicates of one grid cell, every stage
+    one ``training.train_lanes`` dispatch: the two g1s of all seeds run as
+    2S lanes, g2 as S lanes, g3 as S lanes — one compile and one host sync
+    per epoch for the whole replica set instead of S of each.
+
+    ``scenarios`` is a single ``VFLScenario`` shared by every seed, or a
+    sequence of per-seed scenarios of EQUAL shapes (a sweep group: same
+    dataset / n_aligned / feature split, different partition seeds).
+    Returns one ``RunResult`` per seed, each matching what
+    ``run_apcvfl(scenarios[i], seed=seeds[i], ...)`` produces to float
+    tolerance (per-lane trajectories are lane-local; tests/test_replicas.py
+    pins the parity).  The lane loss is the reference Eq. 5 formula
+    (``distill.make_lanes_loss``); ``use_kernel=True`` therefore falls
+    back to S sequential ``run_apcvfl`` calls so the fused kernel really
+    executes — never silently swapped for the reference formula."""
+    scs, seeds = _normalize_replicas("run_apcvfl_replicated", scenarios,
+                                     seeds)
+    S = len(seeds)
+    if S == 0:
+        return []
+    if use_kernel:
+        return [run_apcvfl(sc, lam=lam, kind=kind, seed=s,
+                           batch_size=batch_size, max_epochs=max_epochs,
+                           patience=patience, lr=lr, use_kernel=True,
+                           ablation=ablation)
+                for sc, s in zip(scs, seeds)]
+    train_kw = dict(batch_size=batch_size, max_epochs=max_epochs,
+                    patience=patience, lr=lr)
+
+    channels = [comm.Channel() for _ in range(S)]
+    psis = [psi(sc.active.ids, sc.passive.ids, channel=ch)
+            for sc, ch in zip(scs, channels)]
+    keys = [jax.random.split(jax.random.PRNGKey(s), 4) for s in seeds]
+    epochs = [{} for _ in range(S)]
+
+    if not ablation:
+        # --- Step 1: 2S g1 lanes (active + passive per seed) ---------------
+        lanes = []
+        for sc, s, (k1, k2, _, _) in zip(scs, seeds, keys):
+            lanes.append(training.LaneSpec(
+                ae.init_autoencoder(k1, ae.table3_encoder(
+                    "g1_active", sc.active.x.shape[1])),
+                {"x": sc.active.x}, s))
+            lanes.append(training.LaneSpec(
+                ae.init_autoencoder(k2, ae.table3_encoder(
+                    "g1_passive", sc.passive.x.shape[1])),
+                {"x": sc.passive.x}, s + 1))
+        g1 = training.train_lanes(lanes, ae.masked_recon_loss, **train_kw)
+
+        # --- Step 2: S g2 lanes on device-resident joint latents -----------
+        zjs = []
+        for i, (sc, ch, (_, idx_a, idx_p)) in enumerate(
+                zip(scs, channels, psis)):
+            ra, rp = g1[2 * i], g1[2 * i + 1]
+            epochs[i]["g1_active"] = ra.epochs_run
+            epochs[i]["g1_passive"] = rp.epochs_run
+            za_al = ae.encode(ra.params, jnp.asarray(sc.active.x[idx_a]))
+            zp_al = ae.encode(rp.params, jnp.asarray(sc.passive.x[idx_p]))
+            ch.send_array("step1/Z_passive_aligned", zp_al,
+                          direction="uplink")
+            zjs.append(jnp.concatenate([za_al, zp_al],
+                                       axis=1).astype(jnp.float32))
+        g2 = training.train_lanes(
+            [training.LaneSpec(
+                ae.init_autoencoder(k3, ae.table3_encoder("g2",
+                                                          zj.shape[1])),
+                {"x": zj}, s + 2)
+             for zj, s, (_, _, k3, _) in zip(zjs, seeds, keys)],
+            ae.masked_recon_loss, **train_kw)
+        zts = [ae.encode(r2.params, zj) for r2, zj in zip(g2, zjs)]
+        m2 = zts[0].shape[1]
+        for i, r2 in enumerate(g2):
+            epochs[i]["g2"] = r2.epochs_run
+    else:
+        m2 = ae.table3_encoder("g2", 1)[-1]
+        zts = [None] * S
+
+    # --- Step 3: S g3 distillation lanes ------------------------------------
+    g3_lanes = []
+    for sc, s, (_, _, _, k4), zt, (_, idx_a, _) in zip(scs, seeds, keys,
+                                                       zts, psis):
+        xa = sc.active.x
+        z_teacher = jnp.zeros((len(xa), m2), jnp.float32)
+        mask = jnp.zeros((len(xa),), jnp.float32)
+        if not ablation:
+            z_teacher = z_teacher.at[idx_a].set(zt)
+            mask = mask.at[idx_a].set(1.0)
+        w3 = ae.table3_encoder("g3", xa.shape[1])
+        assert w3[-1] == m2, "M3 == M2: dimensional consistency (Sec. 4.3)"
+        g3_lanes.append(training.LaneSpec(
+            ae.init_autoencoder(k4, w3),
+            {"x": xa, "z_teacher": z_teacher, "aligned": mask}, s + 3))
+    g3 = training.train_lanes(g3_lanes, distill.make_lanes_loss(lam, kind),
+                              **train_kw)
+
+    # --- Step 4: classifier per seed.  The k-fold probe is memory-bound on
+    # CPU (skinny matmuls streaming the full design matrix), so the batched
+    # clf.kfold_cv_many lanes measure at parity or slightly slower here —
+    # per-seed calls keep the sequential path's exact numbers for free.
+    z_alls = [ae.encode(r3.params, jnp.asarray(sc.active.x))
+              for sc, r3 in zip(scs, g3)]
+    metrics_list = [clf.kfold_cv(z, sc.active.y, sc.n_classes, seed=s)
+                    for z, sc, s in zip(z_alls, scs, seeds)]
+    results = []
+    data_rounds = 0 if ablation else comm.APCVFL_ROUNDS
+    for s, ch, r3, ep, metrics in zip(seeds, channels, g3, epochs,
+                                      metrics_list):
+        ep["g3"] = r3.epochs_run
+        results.append(RunResult(
+            method="apcvfl", metrics=metrics, rounds=data_rounds,
+            epochs=ep, comm=ch.summary(), seed=s, z_dim=m2,
+            params={"g3": r3.params}, channels=(ch,)))
+    return results
 
 
 def run_local_baseline(sc, seed: int = 0) -> dict:
@@ -151,19 +304,19 @@ def run_apcvfl_aligned_only(sc: VFLScenario, *, seed: int = 0,
 
     ae_a = ae.init_autoencoder(k1, ae.table3_encoder("g1_active", xa.shape[1]))
     ae_p = ae.init_autoencoder(k2, ae.table3_encoder("g1_passive", xp.shape[1]))
-    ra, rp = training.train_many(
-        [training.PartySpec(ae_a, {"x": xa}, seed),
-         training.PartySpec(ae_p, {"x": xp}, seed + 1)],
+    ra, rp = training.train_lanes(
+        [training.LaneSpec(ae_a, {"x": xa}, seed),
+         training.LaneSpec(ae_p, {"x": xp}, seed + 1)],
         ae.masked_recon_loss, **train_kw)
-    za = np.asarray(ae.encode(ra.params, jnp.asarray(xa)))
-    zp = np.asarray(ae.encode(rp.params, jnp.asarray(xp)))
+    za = ae.encode(ra.params, jnp.asarray(xa))
+    zp = ae.encode(rp.params, jnp.asarray(xp))
     channel.send_array("step1/Z_passive_aligned", zp, direction="uplink")
 
-    zj = np.concatenate([za, zp], 1).astype(np.float32)
+    zj = jnp.concatenate([za, zp], 1).astype(jnp.float32)
     ae_2 = ae.init_autoencoder(k3, ae.table3_encoder("g2", zj.shape[1]))
     r2 = training.train(ae_2, {"x": zj}, ae.recon_loss, seed=seed + 2,
                         **train_kw)
-    z = np.asarray(ae.encode(r2.params, jnp.asarray(zj)))
+    z = np.asarray(ae.encode(r2.params, zj))
 
     # train/test split as in the SplitNN comparison (test_size held out)
     rng = np.random.RandomState(seed)
@@ -179,6 +332,84 @@ def run_apcvfl_aligned_only(sc: VFLScenario, *, seed: int = 0,
                              "g2": r2.epochs_run},
                      comm=channel.summary(), seed=seed, z_dim=z.shape[1],
                      params={"g2": r2.params}, channels=(channel,))
+
+
+def run_apcvfl_aligned_only_replicated(scenarios, *, seeds,
+                                       batch_size: int = HP.batch_size,
+                                       max_epochs: int = HP.max_epochs,
+                                       patience: int = HP.patience,
+                                       lr: float = HP.lr,
+                                       test_size: int = HP.test_size
+                                       ) -> list:
+    """S seed replicates of the aligned-only adaptation, every stage one
+    ``train_lanes`` dispatch (2S g1 lanes, S g2 lanes).  Both of its
+    stages are dispatch-bound at tabular shapes, so this is the replica
+    grid where lane batching pays most on CPU (see
+    ``benchmarks/trainbench.py --sweep``).  Same contract as
+    ``run_apcvfl_replicated``: one scenario shared or one per seed, one
+    ``RunResult`` per seed matching the sequential path within lane
+    tolerance."""
+    scs, seeds = _normalize_replicas("run_apcvfl_aligned_only_replicated",
+                                     scenarios, seeds)
+    S = len(seeds)
+    if S == 0:
+        return []
+    train_kw = dict(batch_size=batch_size, max_epochs=max_epochs,
+                    patience=patience, lr=lr)
+
+    channels = [comm.Channel() for _ in range(S)]
+    keys = [jax.random.split(jax.random.PRNGKey(s), 3) for s in seeds]
+    cells = []                        # (xa, xp, y) aligned rows per seed
+    for sc, ch in zip(scs, channels):
+        _, idx_a, idx_p = psi(sc.active.ids, sc.passive.ids, channel=ch)
+        cells.append((sc.active.x[idx_a], sc.passive.x[idx_p],
+                      sc.active.y[idx_a]))
+
+    lanes = []
+    for (xa, xp, _), s, (k1, k2, _) in zip(cells, seeds, keys):
+        lanes.append(training.LaneSpec(
+            ae.init_autoencoder(k1, ae.table3_encoder("g1_active",
+                                                      xa.shape[1])),
+            {"x": xa}, s))
+        lanes.append(training.LaneSpec(
+            ae.init_autoencoder(k2, ae.table3_encoder("g1_passive",
+                                                      xp.shape[1])),
+            {"x": xp}, s + 1))
+    g1 = training.train_lanes(lanes, ae.masked_recon_loss, **train_kw)
+
+    zjs = []
+    for i, ((xa, xp, _), ch) in enumerate(zip(cells, channels)):
+        ra, rp = g1[2 * i], g1[2 * i + 1]
+        za = ae.encode(ra.params, jnp.asarray(xa))
+        zp = ae.encode(rp.params, jnp.asarray(xp))
+        ch.send_array("step1/Z_passive_aligned", zp, direction="uplink")
+        zjs.append(jnp.concatenate([za, zp], 1).astype(jnp.float32))
+    g2 = training.train_lanes(
+        [training.LaneSpec(
+            ae.init_autoencoder(k3, ae.table3_encoder("g2", zj.shape[1])),
+            {"x": zj}, s + 2)
+         for zj, s, (_, _, k3) in zip(zjs, seeds, keys)],
+        ae.masked_recon_loss, **train_kw)
+
+    results = []
+    for i, ((_, _, y), s, ch, zj, r2) in enumerate(zip(cells, seeds,
+                                                       channels, zjs, g2)):
+        z = np.asarray(ae.encode(r2.params, zj))
+        rng = np.random.RandomState(s)
+        perm = rng.permutation(len(z))
+        te, tr = perm[:test_size], perm[test_size:]
+        params = clf.fit_logreg(jnp.asarray(z[tr]), jnp.asarray(y[tr]),
+                                scs[i].n_classes)
+        pred = clf.predict(params, z[te])
+        metrics = clf.f1_scores(y[te], pred, scs[i].n_classes)
+        ra, rp = g1[2 * i], g1[2 * i + 1]
+        results.append(RunResult(
+            method="apcvfl_aligned_only", metrics=metrics, rounds=1,
+            epochs={"g1_active": ra.epochs_run,
+                    "g1_passive": rp.epochs_run, "g2": r2.epochs_run},
+            comm=ch.summary(), seed=s, z_dim=z.shape[1],
+            params={"g2": r2.params}, channels=(ch,)))
+    return results
 
 
 # ---------------------------------------------------------------------------

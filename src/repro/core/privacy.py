@@ -9,6 +9,12 @@ network z -> x_hat. This module quantifies that leakage: inversion R^2 on
 held-out aligned rows as a function of the auxiliary-pair budget — a
 beyond-paper experiment that sharpens the privacy statement from
 "safe" to "safe unless the attacker holds >= N paired rows".
+
+``run_inversion`` wraps the attack as a registered experiment method
+(``@register_method("inversion")`` in ``repro.experiments.methods``), so
+privacy curves run from the same declarative spec JSONs as the accuracy
+grids: sweep ``n_aux`` via per-method params and read ``r2_mean`` off the
+tidy records.
 """
 from __future__ import annotations
 
@@ -18,8 +24,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.configs.apcvfl_paper import TABULAR as HP
 from repro.core import autoencoder as ae
+from repro.core import comm
 from repro.core import training
+from repro.core.psi import psi
+from repro.experiments.results import RunResult
 
 
 @dataclass
@@ -70,3 +80,46 @@ def leakage_curve(z: np.ndarray, x: np.ndarray, budgets=(10, 50, 200, 1000),
             continue
         out.append(inversion_attack(z, x, n_aux=n_aux, seed=seed))
     return out
+
+
+def run_inversion(sc, *, n_aux: int = 64, hidden: int = 128,
+                  batch_size: int = HP.batch_size,
+                  max_epochs: int = HP.max_epochs,
+                  patience: int = HP.patience, lr: float = HP.lr,
+                  seed: int = 0) -> RunResult:
+    """The attack as a spec-runnable method, on exactly the protocol's
+    attack surface: the passive party trains g1 on its FULL dataset (as
+    step 1 prescribes) but shares only the ALIGNED rows' latents with the
+    active party — the same PSI + ``Z_passive_aligned`` exchange
+    ``run_apcvfl`` byte-accounts, so comm records line up across methods
+    in one spec.  The honest-but-curious active party then inverts those
+    latents with an ``n_aux``-pair auxiliary budget.  ``metrics`` carries
+    the leakage numbers (``r2_mean`` is the headline: 0 = paper's safe
+    regime, 1 = full reconstruction); ``n_aux`` is clamped so at least 20
+    held-out aligned rows remain to measure on."""
+    xp = np.asarray(sc.passive.x)
+    channel = comm.Channel()
+    _, _, idx_p = psi(sc.active.ids, sc.passive.ids, channel=channel)
+    key = jax.random.split(jax.random.PRNGKey(seed), 4)[1]   # g1_passive's
+    params = ae.init_autoencoder(key, ae.table3_encoder("g1_passive",
+                                                        xp.shape[1]))
+    r1 = training.train(params, {"x": xp}, ae.recon_loss,
+                        batch_size=batch_size, max_epochs=max_epochs,
+                        patience=patience, lr=lr, seed=seed + 1)
+    x_al = xp[idx_p]
+    if len(x_al) < 22:        # >= 2 aux pairs AND >= 20 held-out rows
+        raise ValueError(
+            f"run_inversion: {len(x_al)} aligned rows is too few to "
+            f"measure leakage (need >= 22: 2 auxiliary pairs + 20 "
+            f"held-out rows)")
+    z = np.asarray(ae.encode(r1.params, jnp.asarray(x_al)))
+    channel.send_array("step1/Z_passive_aligned", z, direction="uplink")
+    rep = inversion_attack(z, x_al, n_aux=max(min(n_aux, len(z) - 20), 2),
+                           hidden=hidden, max_epochs=max_epochs, seed=seed)
+    metrics = {"r2_mean": rep.r2_mean, "attack_mse": rep.attack_mse,
+               "baseline_mse": rep.baseline_mse,
+               "n_aux": float(rep.n_aux)}
+    return RunResult(method="inversion", metrics=metrics, rounds=1,
+                     epochs={"g1_passive": r1.epochs_run},
+                     comm=channel.summary(), seed=seed, z_dim=z.shape[1],
+                     channels=(channel,))

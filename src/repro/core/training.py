@@ -37,37 +37,48 @@ Compilation caching: one jitted epoch function exists per
 semantic ``cache_key`` attribute so repeated stages reuse the same compiled
 engine instead of re-tracing (see ``get_engine``).
 
-Batched K-party training (``train_many``)
------------------------------------------
-``train_many`` runs K independent training problems (one per federated
-party) as ONE vmapped scan: one upload, one compile, one host sync per
-epoch for ALL parties.  The padded-stack layout:
+Replica-lane training (``train_lanes``)
+---------------------------------------
+A *lane* is any independent training instance — a federated party's g1
+stage, a seed replicate of the same stage, a CV fold.  ``train_lanes``
+runs L lanes as ONE vmapped scan: one upload, one compile, one host sync
+per epoch for ALL lanes.  K-party batching (PR 2's ``train_many``) is the
+K-lane special case; seed replication stacks S replicates of every stage
+into S x K lanes through the very same engine (``core.pipeline``'s
+``run_apcvfl_replicated`` does exactly this).  The padded-stack layout:
 
-* every param leaf is zero-padded per-axis to the max shape across parties
-  and stacked along a leading party axis (zero rows/cols feed on zero
-  inputs and receive zero gradients, so each party's real sub-block evolves
+* every param leaf is zero-padded per-axis to the max shape across lanes
+  and stacked along a leading lane axis (zero rows/cols feed on zero
+  inputs and receive zero gradients, so each lane's real sub-block evolves
   exactly as it would unpadded);
-* every data array is zero-padded to the max row count / trailing width and
-  stacked likewise; the loss must consume the ``mask`` (real-feature
-  columns) and ``row_w`` (real-row weights) entries the engine adds to each
-  batch — see ``autoencoder.masked_recon_loss``;
-* each party keeps its own host-side train/val split, PRNG stream, Adam
+* every data array is zero-padded to the max row count / trailing width
+  and stacked likewise, staying on device throughout (jax-array inputs —
+  e.g. encoder outputs of an earlier protocol stage — are padded and
+  stacked without a host round-trip); when padding is present the loss
+  must consume the ``mask`` (real-feature columns) and ``row_w`` (real-row
+  weights) entries the engine adds to each batch — see
+  ``autoencoder.masked_recon_loss``.  Equal-shape lanes (the seed-replica
+  case) need no masking: losses that ignore the extra keys see exactly
+  the batches ``train`` would feed them;
+* each lane keeps its own host-side train/val split, PRNG stream, Adam
   state and step budget (``n_batches_i = n_tr_i // bs``); the shared scan
-  runs ``max_i n_batches_i`` steps and a per-party step mask freezes params
-  past a party's own budget;
-* early stopping is a per-party ``live`` mask (mirroring the masked-loss
-  trick in ``distill.make_loss``): converged parties keep stepping on
+  runs ``max_i n_batches_i`` steps and a per-lane step mask freezes params
+  past a lane's own budget;
+* early stopping is a per-lane ``live`` mask (mirroring the masked-loss
+  trick in ``distill.make_loss``): converged lanes keep stepping on
   frozen params so the batch shape stays static, and the epoch loop ends
-  when every party has stopped.
+  when every lane has stopped.
 
-The shared batch size is clamped to the SMALLEST party's train split so
-every party runs at least one step per epoch.  For a party whose row count
+The shared batch size is clamped to the SMALLEST lane's train split so
+every lane runs at least one step per epoch.  For a lane whose row count
 equals the padded maximum, the engine draws the IDENTICAL device
 permutation as ``train`` (same fold_in key); when additionally
-``batch_size <= min_i n_tr_i`` (no cross-party clamping), that party's
+``batch_size <= min_i n_tr_i`` (no cross-lane clamping), that lane's
 results match the sequential path to float tolerance — the parity tests in
-``tests/test_train_many.py`` pin this.
+``tests/test_train_many.py`` and ``tests/test_replicas.py`` pin this.
 
+``train_many`` and ``PartySpec`` remain as aliases of ``train_lanes`` and
+``LaneSpec`` (the K-party call sites read naturally with either name).
 The original per-batch host loop (``train_legacy``) soaked as a live
 parity oracle through PRs 1-2 and is now retired; its role is covered by
 the stored-trace oracle above.
@@ -95,14 +106,18 @@ class TrainResult:
 
 
 @dataclass
-class PartySpec:
-    """One party's training problem for ``train_many``: unpadded init
-    params, unpadded row-aligned data dict, and the party's PRNG seed
+class LaneSpec:
+    """One lane's training problem for ``train_lanes``: unpadded init
+    params, unpadded row-aligned data dict, and the lane's PRNG seed
     (drives both the host train/val split and the device epoch perms,
-    exactly as the same seed would in ``train``)."""
+    exactly as the same seed would in ``train``).  A lane is any
+    independent instance — a party, a seed replicate, a fold."""
     params: dict
     data: dict
     seed: int = 0
+
+
+PartySpec = LaneSpec     # the K-party special case, kept by its PR-2 name
 
 
 # ---------------------------------------------------------------------------
@@ -163,9 +178,13 @@ def get_engine(loss_fn: Callable, *, lr: float = 1e-3):
     return _cached_engine("train", loss_fn, lr, _build_engine)
 
 
-def get_many_engine(loss_fn: Callable, *, lr: float = 1e-3):
-    """Jitted vmapped K-party epoch runner, cached like ``get_engine``."""
+def get_lanes_engine(loss_fn: Callable, *, lr: float = 1e-3):
+    """Jitted vmapped replica-lane epoch runner, cached like
+    ``get_engine``."""
     return _cached_engine("train_many", loss_fn, lr, _build_many_engine)
+
+
+get_many_engine = get_lanes_engine   # pre-lane-engine name
 
 
 def train(params, data: dict, loss_fn: Callable, *, batch_size: int = 128,
@@ -179,8 +198,12 @@ def train(params, data: dict, loss_fn: Callable, *, batch_size: int = 128,
     split = np.random.RandomState(seed).permutation(n)
     n_val = max(int(n * val_frac), 1)
     val_idx, tr_idx = split[:n_val], split[n_val:]
-    val = {k: jnp.asarray(np.asarray(v)[val_idx]) for k, v in data.items()}
-    tr = {k: jnp.asarray(np.asarray(v)[tr_idx]) for k, v in data.items()}
+    # jnp.asarray is a no-op for arrays already on device (an earlier
+    # stage's encoder output), one upload for host arrays; the split
+    # itself is a device gather either way
+    dev = {k: jnp.asarray(v) for k, v in data.items()}
+    val = {k: v[val_idx] for k, v in dev.items()}
+    tr = {k: v[tr_idx] for k, v in dev.items()}
     n_tr = len(tr_idx)
     bs = max(min(batch_size, n_tr), 1)
     n_batches = n_tr // bs
@@ -219,30 +242,35 @@ def train(params, data: dict, loss_fn: Callable, *, batch_size: int = 128,
 
 
 # ---------------------------------------------------------------------------
-# batched K-party engine: all parties' epochs as ONE vmapped scan
+# replica-lane engine: all lanes' epochs as ONE vmapped scan
 # ---------------------------------------------------------------------------
 
-def _pad_to(arr: np.ndarray, shape) -> np.ndarray:
-    arr = np.asarray(arr)
+# all lanes' epoch keys in one dispatch; module-scoped so the trivial
+# trace compiles once per process, not once per train_lanes call
+_FOLD_KEYS = jax.jit(jax.vmap(jax.random.fold_in, (0, None)))
+
+
+def _pad_to(arr: jax.Array, shape) -> jax.Array:
     pads = [(0, t - s) for s, t in zip(arr.shape, shape)]
-    return np.pad(arr, pads) if any(p for _, p in pads) else arr
+    return jnp.pad(arr, pads) if any(p for _, p in pads) else arr
 
 
 def _pad_stack(trees):
     """Zero-pad every leaf per-axis to the max shape across trees and stack
-    along a new leading party axis.  All trees must share one structure."""
+    along a new leading lane axis, entirely on device (host leaves are
+    uploaded once here; device leaves — an earlier stage's encoder outputs
+    — never round-trip).  All trees must share one structure."""
     treedef = jax.tree.structure(trees[0])
     for t in trees[1:]:
         if jax.tree.structure(t) != treedef:
-            raise ValueError("train_many: all parties must share one "
+            raise ValueError("train_lanes: all lanes must share one "
                              "param/data tree structure")
-    leaves = [jax.tree.leaves(t) for t in trees]
+    leaves = [[jnp.asarray(l) for l in jax.tree.leaves(t)] for t in trees]
     stacked = []
     for pos in zip(*leaves):
-        target = tuple(max(np.asarray(l).shape[d] for l in pos)
-                       for d in range(np.asarray(pos[0]).ndim))
-        stacked.append(jnp.asarray(np.stack([_pad_to(l, target)
-                                             for l in pos])))
+        target = tuple(max(l.shape[d] for l in pos)
+                       for d in range(pos[0].ndim))
+        stacked.append(jnp.stack([_pad_to(l, target) for l in pos]))
     return jax.tree.unflatten(treedef, stacked)
 
 
@@ -257,7 +285,7 @@ def _build_many_engine(loss_fn: Callable, lr: float):
             n_max = tr_p["x"].shape[0]
             perm = jax.random.permutation(key, n_max)
             # stable-partition real rows (< n_tr_p) to the front: for an
-            # unpadded party this is exactly the solo engine's permutation,
+            # unpadded lane this is exactly the solo engine's permutation,
             # so the two paths draw identical mini-batches
             order = perm[jnp.argsort(perm >= n_tr_p, stable=True)]
             idx = order[: n_batches * batch_size].reshape(n_batches,
@@ -271,7 +299,7 @@ def _build_many_engine(loss_fn: Callable, lr: float):
                 batch["row_w"] = jnp.ones((batch_size,), jnp.float32)
                 loss, grads = jax.value_and_grad(loss_fn)(p, batch)
                 p2, s2, _ = opt.update(grads, s, p)
-                # freeze past this party's own step budget or after its
+                # freeze past this lane's own step budget or after its
                 # early stop — the masked-select twin of distill.make_loss
                 on = live_p & (i < nb_p)
                 sel = lambda a, b: jnp.where(on, a, b)
@@ -289,61 +317,65 @@ def _build_many_engine(loss_fn: Callable, lr: float):
     return run_epoch_k
 
 
-def train_many(specs: Sequence[PartySpec], loss_fn: Callable, *,
-               batch_size: int = 128, max_epochs: int = 200,
-               patience: int = 10, lr: float = 1e-3,
-               val_frac: float = 0.1) -> List[TrainResult]:
-    """Train K independent problems as one vmapped scan — one upload, one
-    compile, one host sync per epoch for all parties (module docstring:
-    padded-stack layout, per-party early-stop mask).
+def train_lanes(specs: Sequence[LaneSpec], loss_fn: Callable, *,
+                batch_size: int = 128, max_epochs: int = 200,
+                patience: int = 10, lr: float = 1e-3,
+                val_frac: float = 0.1) -> List[TrainResult]:
+    """Train L independent lanes as one vmapped scan — one upload, one
+    compile, one host sync per epoch for all lanes (module docstring:
+    padded-stack layout, per-lane early-stop mask).
 
-    Every party's ``data`` must carry its feature array under the ``"x"``
+    Every lane's ``data`` must carry its feature array under the ``"x"``
     key — the engine sizes rows and the real-feature ``mask`` from it; any
     other row-aligned keys are padded too but only ``"x"`` is masked.
-    ``loss_fn`` must consume the ``mask`` (real-feature columns) and
-    ``row_w`` (real-row weights) entries the engine adds to every batch —
-    use ``autoencoder.masked_recon_loss`` for reconstruction workloads.
-    Returns one ``TrainResult`` per party with padding stripped from the
-    best-val params and histories truncated at that party's stop epoch."""
+    When lane shapes differ (padding present) ``loss_fn`` must consume the
+    ``mask`` (real-feature columns) and ``row_w`` (real-row weights)
+    entries the engine adds to every batch — use
+    ``autoencoder.masked_recon_loss`` for reconstruction workloads; lanes
+    of identical shape (seed replicas) may use any plain loss, the extra
+    keys are inert.  Returns one ``TrainResult`` per lane with padding
+    stripped from the best-val params and histories truncated at that
+    lane's stop epoch."""
     K = len(specs)
     assert K >= 1
     for sp in specs:
         if "x" not in sp.data:
-            raise ValueError("train_many: every PartySpec.data needs an "
+            raise ValueError("train_lanes: every LaneSpec.data needs an "
                              "'x' feature array (sizes the rows and the "
                              "real-feature mask)")
 
-    # --- host-side split per party, identical to ``train`` ----------------
+    # --- per-lane split: host-side indices, device-side gather ------------
     tr_list, val_list, n_tr_l = [], [], []
     for sp in specs:
         n = len(next(iter(sp.data.values())))
         split = np.random.RandomState(sp.seed).permutation(n)
         n_val = max(int(n * val_frac), 1)
         vi, ti = split[:n_val], split[n_val:]
-        val_list.append({k: np.asarray(v)[vi] for k, v in sp.data.items()})
-        tr_list.append({k: np.asarray(v)[ti] for k, v in sp.data.items()})
+        dev = {k: jnp.asarray(v) for k, v in sp.data.items()}
+        val_list.append({k: v[vi] for k, v in dev.items()})
+        tr_list.append({k: v[ti] for k, v in dev.items()})
         n_tr_l.append(len(ti))
     n_tr = np.asarray(n_tr_l)
     bs = max(min(batch_size, int(n_tr.min())), 1)
-    nb = n_tr // bs                       # per-party step budget per epoch
+    nb = n_tr // bs                       # per-lane step budget per epoch
     n_batches = int(nb.max())
 
     for t, v in zip(tr_list, val_list):
-        t["mask"] = np.ones((t["x"].shape[1],), np.float32)
+        t["mask"] = jnp.ones((t["x"].shape[1],), jnp.float32)
         v["mask"] = t["mask"]
-        v["row_w"] = np.ones((v["x"].shape[0],), np.float32)
+        v["row_w"] = jnp.ones((v["x"].shape[0],), jnp.float32)
 
-    # --- padded-stack uploads: ONE device transfer per side ---------------
+    # --- padded-stack, built on device (no host round-trip) ---------------
     tr = _pad_stack(tr_list)
     val = _pad_stack(val_list)
-    shapes = [[np.asarray(l).shape for l in jax.tree.leaves(sp.params)]
+    shapes = [[np.shape(l) for l in jax.tree.leaves(sp.params)]
               for sp in specs]
     params = _pad_stack([sp.params for sp in specs])
     best_params = jax.tree.map(jnp.copy, params)
     opt_state = paper_adam(lr).init(params)
     opt_state = opt_state._replace(step=jnp.zeros((K,), jnp.int32))
-    engine = get_many_engine(loss_fn, lr=lr)
-    base_keys = [jax.random.PRNGKey(sp.seed) for sp in specs]
+    engine = get_lanes_engine(loss_fn, lr=lr)
+    base_keys = jnp.stack([jax.random.PRNGKey(sp.seed) for sp in specs])
     nb_dev = jnp.asarray(nb, jnp.int32)
     n_tr_dev = jnp.asarray(n_tr, jnp.int32)
 
@@ -355,7 +387,7 @@ def train_many(specs: Sequence[PartySpec], loss_fn: Callable, *,
     vl_hist = [[] for _ in range(K)]
 
     for epoch in range(max_epochs):
-        keys = jnp.stack([jax.random.fold_in(k, epoch) for k in base_keys])
+        keys = _FOLD_KEYS(base_keys, epoch)  # all lanes' keys, one dispatch
         params, opt_state, tl, vl = engine(
             params, opt_state, keys, tr, val, n_tr_dev, nb_dev,
             jnp.asarray(live), n_batches=n_batches, batch_size=bs)
@@ -390,3 +422,6 @@ def train_many(specs: Sequence[PartySpec], loss_fn: Callable, *,
                                    int(epochs_run[i] * nb[i]),
                                    tl_hist[i], vl_hist[i]))
     return results
+
+
+train_many = train_lanes     # the K-party special case, by its PR-2 name

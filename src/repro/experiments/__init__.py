@@ -3,7 +3,8 @@
 Public surface::
 
     from repro.experiments import (ExperimentSpec, MethodSpec, ScenarioSpec,
-                                   RunResult, register_method, get_method,
+                                   RunResult, register_method,
+                                   register_replicas, get_method,
                                    available_methods, run_method,
                                    sweep, tidy, build_scenario)
 
@@ -19,6 +20,7 @@ from repro.experiments.specs import (ExperimentSpec, MethodSpec,  # noqa: F401
 
 _LAZY = {
     "register_method": "registry",
+    "register_replicas": "registry",
     "get_method": "registry",
     "available_methods": "registry",
     "run_method": "registry",

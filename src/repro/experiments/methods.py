@@ -9,9 +9,10 @@ lazily on first lookup).
 """
 from __future__ import annotations
 
-from repro.core import comm, multiparty, pipeline, splitnn, vfedtrans
+from repro.core import comm, multiparty, pipeline, privacy, splitnn, \
+    vfedtrans
 from repro.core.multiparty import VFLScenarioK
-from repro.experiments.registry import register_method
+from repro.experiments.registry import register_method, register_replicas
 from repro.experiments.results import RunResult
 from repro.experiments.specs import MethodSpec
 
@@ -36,12 +37,40 @@ def _apcvfl(scenario, spec: MethodSpec, *, seed: int = 0) -> RunResult:
     return pipeline.run_apcvfl(scenario, seed=seed, **spec.params)
 
 
+@register_replicas("apcvfl")
+def _apcvfl_replicated(scenarios, spec: MethodSpec, *, seeds):
+    """Seed groups of 2-party cells run through ``run_apcvfl_replicated``
+    — every protocol stage is S stacked lanes of one vmapped scan.
+    K-party groups fall back to the sequential per-seed path (replicating
+    ``run_apcvfl_k`` is an open item)."""
+    if isinstance(scenarios[0], VFLScenarioK):
+        return [multiparty.run_apcvfl_k(sc, seed=s, **spec.params)
+                for sc, s in zip(scenarios, seeds)]
+    return pipeline.run_apcvfl_replicated(scenarios, seeds=seeds,
+                                          **spec.params)
+
+
+@register_method("inversion", params_from=privacy.run_inversion)
+def _inversion(scenario, spec: MethodSpec, *, seed: int = 0) -> RunResult:
+    """Representation-inversion privacy probe (``core.privacy``): spec
+    params sweep the attacker's auxiliary budget (``n_aux``); metrics are
+    leakage numbers (r2_mean/attack_mse), not classification scores."""
+    return privacy.run_inversion(scenario, seed=seed, **spec.params)
+
+
 @register_method("apcvfl_aligned_only",
                  params_from=pipeline.run_apcvfl_aligned_only)
 def _apcvfl_aligned_only(scenario, spec: MethodSpec, *,
                          seed: int = 0) -> RunResult:
     return pipeline.run_apcvfl_aligned_only(scenario, seed=seed,
                                             **spec.params)
+
+
+@register_replicas("apcvfl_aligned_only")
+def _apcvfl_aligned_only_replicated(scenarios, spec: MethodSpec, *, seeds):
+    return pipeline.run_apcvfl_aligned_only_replicated(scenarios,
+                                                       seeds=seeds,
+                                                       **spec.params)
 
 
 @register_method("splitnn", params_from=splitnn.run_splitnn)

@@ -14,6 +14,7 @@ and cycle-free.
 """
 from __future__ import annotations
 
+import dataclasses
 import inspect
 from dataclasses import dataclass
 from typing import Callable, Dict, Optional, Tuple
@@ -25,6 +26,15 @@ class MethodEntry:
     fn: Callable
     supports_multiparty: bool = False
     accepts: Optional[frozenset] = None   # param names; None = accepts any
+    # replica-lane runner: (scenarios, spec, *, seeds) -> List[RunResult],
+    # one result per seed in order; attached via ``register_replicas``
+    replicated_fn: Optional[Callable] = None
+
+    @property
+    def supports_replicas(self) -> bool:
+        """True when the method can run a whole seed-replica group (grid
+        cells identical up to seed) through one replica-lane dispatch."""
+        return self.replicated_fn is not None
 
 
 _REGISTRY: Dict[str, MethodEntry] = {}
@@ -52,6 +62,32 @@ def register_method(name: str, *, supports_multiparty: bool = False,
             raise ValueError(f"method {name!r} is already registered")
         accepts = _kwarg_names(params_from) if params_from else None
         _REGISTRY[name] = MethodEntry(name, fn, supports_multiparty, accepts)
+        return fn
+    return deco
+
+
+def register_replicas(name: str):
+    """Decorator: attach a replica-lane runner to the already-registered
+    method ``name``.  The runner signature is::
+
+        fn(scenarios, spec: MethodSpec, *, seeds) -> List[RunResult]
+
+    where ``scenarios`` is one built scenario per seed (a sweep group:
+    grid cells identical up to seed) and the return order matches
+    ``seeds``.  ``sweep()`` dispatches a whole group through it instead of
+    looping ``entry.fn`` per seed; each per-seed result must match the
+    sequential path within replica-parity tolerance
+    (``tests/test_replicas.py``)."""
+    def deco(fn: Callable) -> Callable:
+        _ensure_builtins()     # a built-in name must resolve here too
+        entry = _REGISTRY.get(name)
+        if entry is None:
+            raise KeyError(f"register_replicas: method {name!r} is not "
+                           f"registered yet")
+        if entry.replicated_fn is not None:
+            raise ValueError(f"method {name!r} already has a replicated "
+                             f"runner")
+        _REGISTRY[name] = dataclasses.replace(entry, replicated_fn=fn)
         return fn
     return deco
 

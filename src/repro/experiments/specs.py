@@ -79,7 +79,14 @@ class ScenarioSpec:
 
 @dataclass(frozen=True)
 class ExperimentSpec:
-    """The declarative experiment: scenario grid x methods."""
+    """The declarative experiment: scenario grid x methods.
+
+    ``replicate=True`` (the default) lets ``sweep()`` batch grid cells
+    that are identical up to seed through a method's replica-lane runner
+    (one vmapped dispatch for all seeds); methods without one, and
+    ``replicate=False`` specs, run the sequential per-seed path.  Either
+    way results arrive in the same order with the same values up to
+    replica-parity tolerance."""
     name: str
     dataset: str = "bcw"
     methods: Tuple[MethodSpec, ...] = ()
@@ -88,6 +95,7 @@ class ExperimentSpec:
     n_active_features: int = 5
     seeds: Tuple[int, ...] = (0,)
     overrides: Dict = field(default_factory=dict)
+    replicate: bool = True
 
     def scenarios(self) -> Iterator[ScenarioSpec]:
         """Expand the aligned x K x seed grid (methods loop inside each

@@ -6,6 +6,17 @@ partitions and label vectors are identical across methods), and returns a
 flat list of uniform ``RunResult`` records.  ``tidy(results)`` flattens
 them into JSON-ready rows for files and dataframes.
 
+Replica-lane dispatch: grid cells that are identical up to seed (the grid
+keeps seeds innermost, so they are consecutive) form a *seed group*.  For
+a method whose registry entry carries a replicated runner
+(``register_replicas``), the whole group runs as ONE call with a leading
+replica axis — S seeds of every protocol stage training as stacked lanes
+of one vmapped scan (``training.train_lanes``) instead of S sequential
+protocol runs.  Methods without one, single-seed groups, and
+``replicate=False`` specs take the sequential per-seed path.  Result
+order and values are the same either way (parity within the lane-engine
+tolerance, pinned by ``tests/test_replicas.py``).
+
 Validation is eager: unknown method names and K>2 grids containing
 2-party-only methods raise BEFORE any scenario is built or any model
 compiled.
@@ -13,7 +24,7 @@ compiled.
 from __future__ import annotations
 
 from dataclasses import replace
-from typing import Callable, List, Optional
+from typing import Callable, Iterator, List, Optional
 
 from repro.data.synthetic import make_dataset
 from repro.data.vertical import make_scenario
@@ -73,6 +84,20 @@ def _validate(spec: ExperimentSpec) -> None:
                     f"{sorted(entry.accepts)}")
 
 
+def _seed_groups(spec: ExperimentSpec) -> Iterator[List[ScenarioSpec]]:
+    """Yield runs of consecutive grid cells identical up to seed.  The
+    grid expansion keeps seeds innermost, so each aligned x K cell's
+    seeds arrive as one contiguous group."""
+    group: List[ScenarioSpec] = []
+    for sspec in spec.scenarios():
+        if group and replace(sspec, seed=group[0].seed) != group[0]:
+            yield group
+            group = []
+        group.append(sspec)
+    if group:
+        yield group
+
+
 def sweep(spec: ExperimentSpec, *,
           progress: Optional[Callable[[str], None]] = None
           ) -> List[RunResult]:
@@ -80,33 +105,52 @@ def sweep(spec: ExperimentSpec, *,
 
     Every result's ``scenario`` dict carries the resolved grid coordinates
     and its ``method`` carries the spec's row label, so the output is
-    self-describing without the spec in hand."""
+    self-describing without the spec in hand.  Seed groups dispatch
+    through replica-lane runners where available (module docstring);
+    results keep the historical order (cell-major, methods inside each
+    cell) regardless of how they were computed."""
     _validate(spec)
     ds_cache: dict = {}
     results: List[RunResult] = []
-    for sspec in spec.scenarios():
-        scenario = build_scenario(sspec, _ds_cache=ds_cache)
-        coords = {
-            "dataset": sspec.dataset,
-            "n_aligned": scenario.n_aligned,
-            "n_parties": sspec.n_parties,
-            "n_active_features": sspec.n_active_features,
-        }
+    for group in _seed_groups(spec):
+        scenarios = [build_scenario(s, _ds_cache=ds_cache) for s in group]
+        seeds = [s.seed for s in group]
+        coords = [{
+            "dataset": s.dataset,
+            "n_aligned": sc.n_aligned,
+            "n_parties": s.n_parties,
+            "n_active_features": s.n_active_features,
+        } for s, sc in zip(group, scenarios)]
+        per_method: List[List[RunResult]] = []
         for m in spec.methods:
             entry = get_method(m.method)
-            params = {**spec.overrides, **m.params}
-            r = entry.fn(scenario, replace(m, params=params),
-                         seed=sspec.seed)
-            r.method = m.row_label
-            r.seed = sspec.seed
-            r.scenario = dict(coords)
-            results.append(r)
-            if progress is not None:
-                progress(f"{spec.name}: {m.row_label} "
-                         f"al={coords['n_aligned']} K={coords['n_parties']} "
-                         f"seed={sspec.seed} -> "
-                         + " ".join(f"{k}={v:.4f}"
-                                    for k, v in r.metrics.items()))
+            mspec = replace(m, params={**spec.overrides, **m.params})
+            if (spec.replicate and entry.supports_replicas
+                    and len(group) > 1):
+                rs = entry.replicated_fn(scenarios, mspec, seeds=seeds)
+                if len(rs) != len(group):
+                    raise RuntimeError(
+                        f"replicated runner for {m.method!r} returned "
+                        f"{len(rs)} results for {len(group)} seeds")
+            else:
+                rs = [entry.fn(sc, mspec, seed=s)
+                      for sc, s in zip(scenarios, seeds)]
+            per_method.append(rs)
+        for j, sspec in enumerate(group):
+            for m, rs in zip(spec.methods, per_method):
+                r = rs[j]
+                r.method = m.row_label
+                r.seed = sspec.seed
+                r.scenario = dict(coords[j])
+                results.append(r)
+                if progress is not None:
+                    progress(
+                        f"{spec.name}: {m.row_label} "
+                        f"al={coords[j]['n_aligned']} "
+                        f"K={coords[j]['n_parties']} "
+                        f"seed={sspec.seed} -> "
+                        + " ".join(f"{k}={v:.4f}"
+                                   for k, v in r.metrics.items()))
     return results
 
 
