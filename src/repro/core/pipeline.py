@@ -130,9 +130,20 @@ def run_apcvfl(sc: VFLScenario, *, lam: float = HP.lam, kind: str = HP.kind,
     metrics = clf.kfold_cv(z_all, sc.active.y, sc.n_classes, seed=seed)
 
     data_rounds = 0 if ablation else comm.APCVFL_ROUNDS
+    params = {"g3": r3.params}
+    artifacts = None
+    if not ablation:
+        # everything the active party holds after training, captured for
+        # serving export (serve.vfl.export_bundle): its own encoders plus
+        # the passive latents it RECEIVED — never the passive party's model
+        params["g1_active"] = ra.params
+        params["g2"] = r2.params
+        artifacts = {"aligned_ids": np.asarray(aligned_ids),
+                     "z_passive_aligned": zp_al}
     return RunResult(method="apcvfl", metrics=metrics, rounds=data_rounds,
                      epochs=epochs, comm=channel.summary(), seed=seed,
-                     z_dim=m2, params={"g3": r3.params}, channels=(channel,))
+                     z_dim=m2, params=params, channels=(channel,),
+                     artifacts=artifacts)
 
 
 # ---------------------------------------------------------------------------
@@ -169,21 +180,14 @@ def run_apcvfl_replicated(scenarios, *, seeds, lam: float = HP.lam,
     Returns one ``RunResult`` per seed, each matching what
     ``run_apcvfl(scenarios[i], seed=seeds[i], ...)`` produces to float
     tolerance (per-lane trajectories are lane-local; tests/test_replicas.py
-    pins the parity).  The lane loss is the reference Eq. 5 formula
-    (``distill.make_lanes_loss``); ``use_kernel=True`` therefore falls
-    back to S sequential ``run_apcvfl`` calls so the fused kernel really
-    executes — never silently swapped for the reference formula."""
+    pins the parity).  ``use_kernel=True`` runs the g3 lanes through the
+    fused Eq. 5 Pallas kernel (``distill.make_lanes_loss(use_kernel=True)``
+    — trainable since the kernel grew its closed-form custom VJP)."""
     scs, seeds = _normalize_replicas("run_apcvfl_replicated", scenarios,
                                      seeds)
     S = len(seeds)
     if S == 0:
         return []
-    if use_kernel:
-        return [run_apcvfl(sc, lam=lam, kind=kind, seed=s,
-                           batch_size=batch_size, max_epochs=max_epochs,
-                           patience=patience, lr=lr, use_kernel=True,
-                           ablation=ablation)
-                for sc, s in zip(scs, seeds)]
     train_kw = dict(batch_size=batch_size, max_epochs=max_epochs,
                     patience=patience, lr=lr)
 
@@ -208,7 +212,7 @@ def run_apcvfl_replicated(scenarios, *, seeds, lam: float = HP.lam,
         g1 = training.train_lanes(lanes, ae.masked_recon_loss, **train_kw)
 
         # --- Step 2: S g2 lanes on device-resident joint latents -----------
-        zjs = []
+        zjs, zps = [], []
         for i, (sc, ch, (_, idx_a, idx_p)) in enumerate(
                 zip(scs, channels, psis)):
             ra, rp = g1[2 * i], g1[2 * i + 1]
@@ -218,6 +222,7 @@ def run_apcvfl_replicated(scenarios, *, seeds, lam: float = HP.lam,
             zp_al = ae.encode(rp.params, jnp.asarray(sc.passive.x[idx_p]))
             ch.send_array("step1/Z_passive_aligned", zp_al,
                           direction="uplink")
+            zps.append(zp_al)
             zjs.append(jnp.concatenate([za_al, zp_al],
                                        axis=1).astype(jnp.float32))
         g2 = training.train_lanes(
@@ -234,6 +239,7 @@ def run_apcvfl_replicated(scenarios, *, seeds, lam: float = HP.lam,
     else:
         m2 = ae.table3_encoder("g2", 1)[-1]
         zts = [None] * S
+        zps = [None] * S
 
     # --- Step 3: S g3 distillation lanes ------------------------------------
     g3_lanes = []
@@ -250,8 +256,9 @@ def run_apcvfl_replicated(scenarios, *, seeds, lam: float = HP.lam,
         g3_lanes.append(training.LaneSpec(
             ae.init_autoencoder(k4, w3),
             {"x": xa, "z_teacher": z_teacher, "aligned": mask}, s + 3))
-    g3 = training.train_lanes(g3_lanes, distill.make_lanes_loss(lam, kind),
-                              **train_kw)
+    g3 = training.train_lanes(
+        g3_lanes, distill.make_lanes_loss(lam, kind, use_kernel=use_kernel),
+        **train_kw)
 
     # --- Step 4: classifier per seed.  The k-fold probe is memory-bound on
     # CPU (skinny matmuls streaming the full design matrix), so the batched
@@ -263,13 +270,20 @@ def run_apcvfl_replicated(scenarios, *, seeds, lam: float = HP.lam,
                     for z, sc, s in zip(z_alls, scs, seeds)]
     results = []
     data_rounds = 0 if ablation else comm.APCVFL_ROUNDS
-    for s, ch, r3, ep, metrics in zip(seeds, channels, g3, epochs,
-                                      metrics_list):
+    for i, (s, ch, r3, ep, metrics) in enumerate(zip(seeds, channels, g3,
+                                                     epochs, metrics_list)):
         ep["g3"] = r3.epochs_run
+        params = {"g3": r3.params}
+        artifacts = None
+        if not ablation:
+            params["g1_active"] = g1[2 * i].params
+            params["g2"] = g2[i].params
+            artifacts = {"aligned_ids": np.asarray(psis[i][0]),
+                         "z_passive_aligned": zps[i]}
         results.append(RunResult(
             method="apcvfl", metrics=metrics, rounds=data_rounds,
             epochs=ep, comm=ch.summary(), seed=s, z_dim=m2,
-            params={"g3": r3.params}, channels=(ch,)))
+            params=params, channels=(ch,), artifacts=artifacts))
     return results
 
 

@@ -22,6 +22,13 @@ def _hash_ids(ids: np.ndarray, salt: bytes) -> dict:
     return hashed
 
 
+def id_positions(ids: np.ndarray) -> dict:
+    """Position map ``{id: row}`` for an id vector — the one id -> row
+    lookup every alignment/cache consumer shares (ids are unique per
+    party; ``_hash_ids`` enforces that at alignment time)."""
+    return {int(v): i for i, v in enumerate(np.asarray(ids))}
+
+
 def psi(ids_a: np.ndarray, ids_b: np.ndarray, *, salt: bytes = b"psi",
         channel=None):
     """Returns (aligned_ids sorted, idx_a, idx_b) such that
@@ -35,8 +42,8 @@ def psi(ids_a: np.ndarray, ids_b: np.ndarray, *, salt: bytes = b"psi",
         channel.send("psi/hashes_b", len(ids_b) * 32, direction="uplink")
     common = sorted(ha[h] for h in (set(ha) & set(hb)))
     common = np.asarray(common, dtype=np.int64)
-    pos_a = {int(v): i for i, v in enumerate(ids_a)}
-    pos_b = {int(v): i for i, v in enumerate(ids_b)}
+    pos_a = id_positions(ids_a)
+    pos_b = id_positions(ids_b)
     idx_a = np.asarray([pos_a[int(c)] for c in common], dtype=np.int64)
     idx_b = np.asarray([pos_b[int(c)] for c in common], dtype=np.int64)
     return common, idx_a, idx_b

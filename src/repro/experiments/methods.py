@@ -39,15 +39,74 @@ def _apcvfl(scenario, spec: MethodSpec, *, seed: int = 0) -> RunResult:
 
 @register_replicas("apcvfl")
 def _apcvfl_replicated(scenarios, spec: MethodSpec, *, seeds):
-    """Seed groups of 2-party cells run through ``run_apcvfl_replicated``
-    — every protocol stage is S stacked lanes of one vmapped scan.
-    K-party groups fall back to the sequential per-seed path (replicating
-    ``run_apcvfl_k`` is an open item)."""
+    """Seed groups run through the replica-lane runners — every protocol
+    stage is S stacked lanes of one vmapped scan: 2-party cells via
+    ``run_apcvfl_replicated``, K-party cells via
+    ``run_apcvfl_k_replicated`` (S*K g1 lanes per dispatch)."""
     if isinstance(scenarios[0], VFLScenarioK):
-        return [multiparty.run_apcvfl_k(sc, seed=s, **spec.params)
-                for sc, s in zip(scenarios, seeds)]
+        return multiparty.run_apcvfl_k_replicated(scenarios, seeds=seeds,
+                                                  **spec.params)
     return pipeline.run_apcvfl_replicated(scenarios, seeds=seeds,
                                           **spec.params)
+
+
+@register_method("serve_smoke", supports_multiparty=True,
+                 params_from=pipeline.run_apcvfl)
+def _serve_smoke(scenario, spec: MethodSpec, *, seed: int = 0) -> RunResult:
+    """Train-then-serve record: runs the full APC-VFL protocol, exports
+    the ``ModelBundle`` (round-tripped through the checkpoint layer), and
+    drives a small mixed request stream through the bucketed serving
+    engine (``repro.serve.vfl``).  The record's metrics combine the
+    training accuracy with the serving health numbers — active-path
+    parity vs the training-time evaluator, cache hit-rate, throughput —
+    so a spec grid can regression-track deployment alongside accuracy."""
+    import os
+    import tempfile
+
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import autoencoder as ae
+    from repro.core import classifier as clf
+    from repro.serve import vfl as sv
+
+    if isinstance(scenario, VFLScenarioK):
+        result = multiparty.run_apcvfl_k(scenario, seed=seed, **spec.params)
+    else:
+        result = pipeline.run_apcvfl(scenario, seed=seed, **spec.params)
+    bundle = sv.export_bundle(result, scenario)
+    with tempfile.TemporaryDirectory() as tmp:
+        path = os.path.join(tmp, "bundle")
+        bundle.save(path)
+        bundle = sv.ModelBundle.load(path)    # serve the reloaded copy
+    engine = sv.VFLServingEngine(bundle)
+    engine.warmup()
+    requests = sv.make_request_stream(
+        scenario.active.x, scenario.active.ids, 200, seed=seed + 1,
+        max_rows=48, p_known=0.5)
+    stats = sv.serve_stream(engine, requests)
+
+    # active-path parity vs the training-time evaluator on the same params
+    probe = jnp.asarray(np.asarray(scenario.active.x[:64], np.float32))
+    want = clf.logreg_logits(bundle.head_active,
+                             ae.encode(bundle.g3, probe))
+    got = engine.predict_active(probe)
+    parity = float(np.max(np.abs(got - np.asarray(want))))
+
+    metrics = dict(result.metrics)
+    metrics.update({
+        "serve_parity_max_abs": parity,
+        "serve_rows_per_s": float(stats["rows_per_s"]),
+        "serve_latency_ms_p50": float(stats["latency_ms_p50"]),
+        "serve_cache_hit_rate": float(stats["cache_hit_rate"] or 0.0),
+        "serve_batch_shapes": float(
+            stats["compiled"]["distinct_batch_shapes"]),
+    })
+    return RunResult(method="serve_smoke", metrics=metrics,
+                     rounds=result.rounds, epochs=result.epochs,
+                     comm=result.comm, seed=seed, z_dim=result.z_dim,
+                     params=result.params, channels=result.channels,
+                     artifacts=result.artifacts)
 
 
 @register_method("inversion", params_from=privacy.run_inversion)

@@ -26,9 +26,12 @@ class RunResult:
     ``comm`` is a JSON-ready dict in the ``Channel.summary()`` shape
     (total/uplink/downlink bytes, transfer count, per-stage bytes);
     ``rounds`` is the protocol's round count (analytic where the protocol
-    prescribes it, e.g. SplitNN's per-batch exchanges).  ``channels`` and
-    ``params`` are live objects for in-process use and are excluded from
-    ``to_record()``.
+    prescribes it, e.g. SplitNN's per-batch exchanges).  ``channels``,
+    ``params`` and ``artifacts`` are live objects for in-process use and
+    are excluded from ``to_record()``; ``artifacts`` carries the
+    non-parameter state the active party holds after training and needs
+    for online serving (aligned row ids, the received passive latents —
+    consumed by ``repro.serve.vfl.export_bundle``).
     """
     method: str
     metrics: Dict[str, float]
@@ -40,6 +43,7 @@ class RunResult:
     z_dim: Optional[int] = None
     params: Optional[dict] = field(default=None, repr=False)
     channels: Tuple[comm.Channel, ...] = field(default=(), repr=False)
+    artifacts: Optional[dict] = field(default=None, repr=False)
 
     @property
     def channel(self) -> Optional[comm.Channel]:

@@ -29,11 +29,17 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
     return jnp.swapaxes(out, 1, 2)
 
 
+def fused_distill_rows(x, x_hat, z, z_t, mask, *, lam: float = 0.01,
+                       kind: str = "mse"):
+    """Per-row Eq. 5 losses (differentiable; closed-form custom VJP)."""
+    return _dl.fused_distill_rows(x, x_hat, z, z_t, mask, lam=lam, kind=kind,
+                                  interpret=INTERPRET)
+
+
 def fused_distill_loss(x, x_hat, z, z_t, mask, *, lam: float = 0.01,
                        kind: str = "mse"):
-    rows = _dl.fused_distill_rows(x, x_hat, z, z_t, mask, lam=lam, kind=kind,
-                                  interpret=INTERPRET)
-    return jnp.mean(rows)
+    return jnp.mean(fused_distill_rows(x, x_hat, z, z_t, mask, lam=lam,
+                                       kind=kind))
 
 
 def decode_attention(q, k, v, slot_pos, pos, *, window: int = 0,

@@ -1,0 +1,535 @@
+"""Online VFL inference: trained-model export, representation cache, and a
+batched serving engine for the APC-VFL protocol.
+
+The paper's deployment story (Eq. 5 / Fig. 2) is that after the ONE
+communication step the active participant predicts **alone**: the distilled
+student g3 maps its local features straight into the joint-representation
+space, so online inference needs no passive party in the loop.  This module
+turns a finished training run into that serving path:
+
+* ``export_bundle`` captures everything the active party holds after
+  training — its encoders (g1_active, g2, g3), a serving classifier head
+  fit once on the training representations, the feature scaler, and the
+  passive latents it RECEIVED for the PSI-aligned rows (never the passive
+  party's model) — into a ``ModelBundle`` that round-trips through
+  ``checkpoint.ckpt`` (save -> load -> bit-identical predictions).
+
+* ``VFLServingEngine`` serves a bundle with two jit-compiled predict
+  paths:
+
+  - **active-only** (the paper's headline mode): ``logits =
+    head(g3_enc(x))`` — any user the active party can feature-ize,
+    zero communication;
+  - **collaborative**: for requests whose row id is PSI-aligned, the
+    engine looks the id up in an on-device *representation cache* of the
+    passive latents captured at export time and predicts from the joint
+    teacher representation ``head_joint(g2_enc([g1a_enc(x), z_p]))`` —
+    the online analogue of FedCVT-style aligned/unaligned handling, still
+    with zero *online* communication (the latents were already paid for
+    by training's single exchange).
+
+* Arbitrary request sizes hit a handful of compiled shapes: a padded
+  power-of-two **batch bucketer** (the same zero-pad trick as the lane
+  engine — padding rows are inert through row-wise MLPs and are sliced
+  off before anything is returned) routes every micro-batch onto one of
+  ``DEFAULT_BUCKETS`` shapes, so a 10k-request mixed stream compiles
+  ~5 shapes per path instead of one per distinct request size.
+
+* ``serve_stream`` is the simulated request-stream driver: it coalesces
+  queued requests into micro-batches up to the largest bucket, routes
+  rows per-request-id between the two paths, and reports throughput,
+  service-time latency percentiles, cache hit-rate and compile counts
+  (``benchmarks/servebench.py`` turns this into ``BENCH_serve.json``).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import ckpt
+from repro.core import autoencoder as ae
+from repro.core import classifier as clf
+from repro.core.psi import id_positions
+
+DEFAULT_BUCKETS = (16, 32, 64, 128, 256)
+
+# filler for rows without an identity: real row ids are the non-negative
+# dataset ids PSI aligned on, so this can never hit the cache
+ANON_ID = -1
+
+
+# ---------------------------------------------------------------------------
+# the exported model
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ModelBundle:
+    """Everything the active party needs to serve a trained APC-VFL model.
+
+    ``g3`` + ``head_active`` are the minimum (the paper's independent-
+    inference mode).  ``g1_active``/``g2``/``head_joint`` plus the cache
+    arrays enable the collaborative path for PSI-aligned users; they are
+    optional (an ablation run exports only the student).  ``x_mean`` /
+    ``x_scale`` standardize incoming request features; export defaults
+    them to the identity because the training pipeline consumes
+    pre-standardized features — pass explicit stats when requests arrive
+    in raw units."""
+    meta: Dict
+    g3: dict
+    head_active: dict
+    x_mean: np.ndarray
+    x_scale: np.ndarray
+    g1_active: Optional[dict] = None
+    g2: Optional[dict] = None
+    head_joint: Optional[dict] = None
+    cache_ids: Optional[np.ndarray] = None       # (n_al,) int64 row ids
+    cache_z: Optional[np.ndarray] = None         # (n_al, z_p) fp32 latents
+
+    @property
+    def supports_collaborative(self) -> bool:
+        return all(v is not None for v in (self.g1_active, self.g2,
+                                           self.head_joint, self.cache_ids,
+                                           self.cache_z))
+
+    def tree(self) -> dict:
+        """The flat-dict pytree persisted by ``save`` (dict-only, so it
+        reloads prototype-free via ``ckpt.load_tree``)."""
+        t = {"g3": self.g3, "head_active": self.head_active,
+             "scaler": {"mean": np.asarray(self.x_mean),
+                        "scale": np.asarray(self.x_scale)}}
+        if self.supports_collaborative:
+            t["g1_active"] = self.g1_active
+            t["g2"] = self.g2
+            t["head_joint"] = self.head_joint
+            t["cache"] = {"ids": np.asarray(self.cache_ids),
+                          "z": np.asarray(self.cache_z)}
+        return t
+
+    def save(self, path: str) -> None:
+        ckpt.save(path, self.tree(), meta=dict(self.meta))
+
+    @classmethod
+    def load(cls, path: str) -> "ModelBundle":
+        tree, side = ckpt.load_tree(path)
+        dev = lambda t: jax.tree.map(jnp.asarray, t)
+        return cls(
+            meta=side.get("meta", {}),
+            g3=dev(tree["g3"]),
+            head_active=dev(tree["head_active"]),
+            x_mean=tree["scaler"]["mean"],
+            x_scale=tree["scaler"]["scale"],
+            g1_active=dev(tree["g1_active"]) if "g1_active" in tree else None,
+            g2=dev(tree["g2"]) if "g2" in tree else None,
+            head_joint=(dev(tree["head_joint"])
+                        if "head_joint" in tree else None),
+            cache_ids=(tree["cache"]["ids"].astype(np.int64)
+                       if "cache" in tree else None),
+            cache_z=tree["cache"]["z"] if "cache" in tree else None,
+        )
+
+
+def export_bundle(result, sc, *, x_mean=None, x_scale=None,
+                  head_steps: int = 300) -> ModelBundle:
+    """Capture a finished ``run_apcvfl`` / ``run_apcvfl_k`` run (its
+    ``RunResult`` plus the scenario that trained it) as a ``ModelBundle``.
+
+    The serving head is fit ONCE on the full enhanced dataset
+    ``g3_enc(X_active)`` with the active party's labels (the k-fold CV of
+    training is an evaluation protocol, not a deployable classifier); when
+    the run carries the collaborative artifacts, a joint head is fit the
+    same way on the teacher representations of the aligned rows."""
+    if result.params is None or "g3" not in result.params:
+        raise ValueError("export_bundle needs a RunResult with trained g3 "
+                         "params (run_apcvfl / run_apcvfl_k)")
+    xa = np.asarray(sc.active.x, np.float32)
+    y = np.asarray(sc.active.y)
+    n_classes = int(sc.n_classes)
+    g3 = result.params["g3"]
+    z_all = ae.encode(g3, jnp.asarray(xa))
+    head_active = clf.fit_logreg(z_all, jnp.asarray(y), n_classes,
+                                 steps=head_steps)
+
+    g1a = result.params.get("g1_active")
+    g2 = result.params.get("g2")
+    head_joint = cache_ids = cache_z = None
+    if g1a is not None and g2 is not None and result.artifacts:
+        cache_ids = np.asarray(result.artifacts["aligned_ids"],
+                               dtype=np.int64)
+        cache_z = np.asarray(result.artifacts["z_passive_aligned"],
+                             np.float32)
+        pos = id_positions(sc.active.ids)
+        idx_a = np.asarray([pos[int(i)] for i in cache_ids], np.int64)
+        za = ae.encode(g1a, jnp.asarray(xa[idx_a]))
+        zj = jnp.concatenate([za, jnp.asarray(cache_z)],
+                             axis=1).astype(jnp.float32)
+        z2 = ae.encode(g2, zj)
+        head_joint = clf.fit_logreg(z2, jnp.asarray(y[idx_a]), n_classes,
+                                    steps=head_steps)
+
+    d = xa.shape[1]
+    meta = {"method": result.method, "dataset": getattr(sc, "name", ""),
+            "n_classes": n_classes, "z_dim": result.z_dim,
+            "n_features_active": d, "seed": result.seed,
+            "n_cached": 0 if cache_ids is None else int(len(cache_ids))}
+    return ModelBundle(
+        meta=meta, g3=g3, head_active=head_active,
+        x_mean=(np.zeros(d, np.float32) if x_mean is None
+                else np.asarray(x_mean, np.float32)),
+        x_scale=(np.ones(d, np.float32) if x_scale is None
+                 else np.asarray(x_scale, np.float32)),
+        g1_active=g1a, g2=g2, head_joint=head_joint,
+        cache_ids=cache_ids, cache_z=cache_z)
+
+
+# ---------------------------------------------------------------------------
+# batch bucketing
+# ---------------------------------------------------------------------------
+
+class BatchBucketer:
+    """Map arbitrary micro-batch row counts onto a small fixed set of
+    padded shapes so the jitted predict paths compile once per bucket.
+    ``split(n)`` chunks an oversized batch into max-bucket pieces plus one
+    tail bucket — every dispatch shape is a member of ``buckets``."""
+
+    def __init__(self, buckets: Sequence[int] = DEFAULT_BUCKETS):
+        if not buckets or any(b <= 0 for b in buckets):
+            raise ValueError(f"buckets must be positive, got {buckets!r}")
+        self.buckets = tuple(sorted(set(int(b) for b in buckets)))
+
+    @property
+    def max(self) -> int:
+        return self.buckets[-1]
+
+    def fit(self, n: int) -> int:
+        """Smallest bucket >= n (n must not exceed the largest bucket)."""
+        for b in self.buckets:
+            if n <= b:
+                return b
+        raise ValueError(f"batch of {n} rows exceeds largest bucket "
+                         f"{self.max}; use split()")
+
+    def split(self, n: int) -> List[Tuple[int, int, int]]:
+        """Chunk n rows into dispatches: [(start, rows, bucket), ...]."""
+        out, start = [], 0
+        while n - start > self.max:
+            out.append((start, self.max, self.max))
+            start += self.max
+        tail = n - start
+        if tail:
+            out.append((start, tail, self.fit(tail)))
+        return out
+
+
+# ---------------------------------------------------------------------------
+# representation cache
+# ---------------------------------------------------------------------------
+
+class RepresentationCache:
+    """On-device passive-latent cache keyed by row id: the Z_p rows the
+    active party received for the PSI-aligned users, gathered per request
+    without any host round-trip for the latents themselves (only the
+    id -> slot lookup is host-side)."""
+
+    def __init__(self, ids: np.ndarray, z):
+        ids = np.asarray(ids, np.int64)
+        self._slot = id_positions(ids)
+        self.z = jnp.asarray(z, jnp.float32)       # (n, z_p), uploaded once
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._slot)
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def lookup(self, ids: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """(hit_mask bool (n,), slot idx int32 (n,) — 0 where missed)."""
+        ids = np.asarray(ids)
+        idx = np.fromiter((self._slot.get(int(i), -1) for i in ids),
+                          np.int64, count=len(ids))
+        hit = idx >= 0
+        self.hits += int(hit.sum())
+        self.misses += int((~hit).sum())
+        return hit, np.where(hit, idx, 0).astype(np.int32)
+
+    def gather(self, idx: np.ndarray):
+        return self.z[jnp.asarray(idx)]
+
+
+# ---------------------------------------------------------------------------
+# the serving engine
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ServeStats:
+    requests: int = 0
+    rows: int = 0
+    dispatches: Dict[str, int] = field(default_factory=dict)
+    padded_rows: int = 0                 # rows of bucket padding dispatched
+    latencies_ms: List[float] = field(default_factory=list)
+
+    def percentile_ms(self, q: float) -> float:
+        return float(np.percentile(self.latencies_ms, q)) \
+            if self.latencies_ms else 0.0
+
+
+class VFLServingEngine:
+    """Batched online inference over a ``ModelBundle`` (module docstring).
+
+    ``predict(x, ids=None)`` routes rows between the two jitted paths —
+    ids found in the representation cache go collaborative, everything
+    else (and every row when ``ids`` is omitted or the bundle has no
+    collaborative artifacts) goes active-only — pads each group to a
+    bucket shape, and reassembles logits in request-row order.  All
+    compiled state is keyed on bucket shape: ``compiled_shapes()`` reports
+    every distinct (path, batch-rows) pair dispatched so far and
+    ``jit_cache_sizes()`` the XLA-level executable counts."""
+
+    def __init__(self, bundle: ModelBundle, *,
+                 buckets: Sequence[int] = DEFAULT_BUCKETS):
+        self.bundle = bundle
+        self.bucketer = BatchBucketer(buckets)
+        self.stats = ServeStats()
+        self._shapes: set = set()
+        dev = lambda t: jax.tree.map(jnp.asarray, t)
+        self._g3 = dev(bundle.g3)
+        self._head = dev(bundle.head_active)
+        scale = np.asarray(bundle.x_scale, np.float32)
+        if not np.all(np.isfinite(scale)) or np.any(scale == 0.0):
+            raise ValueError("bundle x_scale must be finite and nonzero "
+                             "(a constant feature's std is 0 — clamp it "
+                             "to 1 before export)")
+        self._mean = jnp.asarray(bundle.x_mean, jnp.float32)
+        self._inv_scale = 1.0 / jnp.asarray(scale)
+        self._active_fn = jax.jit(self._active_impl)
+        self.cache: Optional[RepresentationCache] = None
+        self._collab_fn = None
+        if bundle.supports_collaborative:
+            self.cache = RepresentationCache(bundle.cache_ids,
+                                             bundle.cache_z)
+            self._g1a = dev(bundle.g1_active)
+            self._g2 = dev(bundle.g2)
+            self._head_joint = dev(bundle.head_joint)
+            self._collab_fn = jax.jit(self._collab_impl)
+
+    # --- the two predict paths (jitted per bucket shape) -------------------
+
+    def _scale(self, x):
+        return (x - self._mean) * self._inv_scale
+
+    def _active_impl(self, x):
+        """Paper headline mode: the distilled student alone."""
+        z = ae.encode(self._g3, self._scale(x))
+        return clf.logreg_logits(self._head, z)
+
+    def _collab_impl(self, x, zp):
+        """Joint-teacher mode for cached (PSI-aligned) users."""
+        za = ae.encode(self._g1a, self._scale(x))
+        zj = jnp.concatenate([za, zp], axis=1).astype(jnp.float32)
+        return clf.logreg_logits(self._head_joint, ae.encode(self._g2, zj))
+
+    # --- dispatch ----------------------------------------------------------
+
+    def _dispatch(self, path: str, x: np.ndarray,
+                  zp_idx: Optional[np.ndarray] = None) -> np.ndarray:
+        """Bucket-pad one row group and run it through ``path``; returns
+        unpadded logits.  Oversized groups are split into max-bucket
+        chunks (every dispatched shape is a bucket member)."""
+        n = len(x)
+        if n == 0:
+            head = self._head if path == "active" else self._head_joint
+            return np.zeros((0, head["w"].shape[1]), np.float32)
+        outs = []
+        for start, rows, bucket in self.bucketer.split(n):
+            xb = np.zeros((bucket, x.shape[1]), np.float32)
+            xb[:rows] = x[start:start + rows]
+            self._shapes.add((path, bucket))
+            self.stats.dispatches[path] = \
+                self.stats.dispatches.get(path, 0) + 1
+            self.stats.padded_rows += bucket - rows
+            if path == "collab":
+                ib = np.zeros((bucket,), np.int32)
+                ib[:rows] = zp_idx[start:start + rows]
+                zp = self.cache.gather(ib)
+                logits = self._collab_fn(jnp.asarray(xb), zp)
+            else:
+                logits = self._active_fn(jnp.asarray(xb))
+            outs.append(np.asarray(logits)[:rows])
+        return np.concatenate(outs) if len(outs) > 1 else outs[0]
+
+    def predict_active(self, x) -> np.ndarray:
+        """Active-only logits for (n, D) features — no ids needed."""
+        x = np.asarray(x, np.float32)
+        self.stats.rows += len(x)
+        return self._dispatch("active", x)
+
+    def predict(self, x, ids=None) -> np.ndarray:
+        """Route rows by id between the cache-backed collaborative path
+        and the active-only path; logits come back in input-row order."""
+        x = np.asarray(x, np.float32)
+        if ids is None or self.cache is None:
+            return self.predict_active(x)
+        if len(ids) != len(x):
+            raise ValueError(f"predict: {len(ids)} ids for {len(x)} rows")
+        self.stats.rows += len(x)
+        hit, slot = self.cache.lookup(ids)
+        if not hit.any():
+            return self._dispatch("active", x)
+        logits = np.empty((len(x), self._head["w"].shape[1]), np.float32)
+        hi = np.nonzero(hit)[0]
+        logits[hi] = self._dispatch("collab", x[hi], slot[hi])
+        mi = np.nonzero(~hit)[0]
+        if len(mi):
+            logits[mi] = self._dispatch("active", x[mi])
+        return logits
+
+    # --- warmup / introspection --------------------------------------------
+
+    def warmup(self) -> None:
+        """Dispatch every bucket shape once through each available path so
+        the serving loop never pays a compile (the shapes a stream can hit
+        are exactly the bucket set).  Counters touched by the warmup are
+        cleared via ``reset_stats``; the compiled-shape record is kept —
+        it IS the compile count the bucketer promises to bound."""
+        d = int(self._mean.shape[0])
+        for b in self.bucketer.buckets:
+            xb = np.zeros((b, d), np.float32)
+            self._dispatch("active", xb)
+            if self._collab_fn is not None:
+                self._dispatch("collab", xb, np.zeros(b, np.int32))
+        self.reset_stats()
+
+    def reset_stats(self) -> None:
+        self.stats = ServeStats()
+        if self.cache is not None:
+            self.cache.hits = 0
+            self.cache.misses = 0
+
+    def compiled_shapes(self) -> dict:
+        """Distinct dispatched (path, batch-rows) pairs and the number of
+        distinct batch shapes across paths (the bucketer's promise: stays
+        within ``len(buckets)`` whatever the request-size mix)."""
+        by_path: dict = {}
+        for path, bucket in sorted(self._shapes):
+            by_path.setdefault(path, []).append(bucket)
+        return {"by_path": by_path,
+                "distinct_batch_shapes":
+                    len({b for _, b in self._shapes})}
+
+    def jit_cache_sizes(self) -> dict:
+        out = {}
+        for name, fn in (("active", self._active_fn),
+                         ("collab", self._collab_fn)):
+            if fn is not None and hasattr(fn, "_cache_size"):
+                out[name] = int(fn._cache_size())
+        return out
+
+
+# ---------------------------------------------------------------------------
+# simulated request stream
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ServeRequest:
+    rid: int
+    x: np.ndarray                        # (n, D) feature rows
+    ids: Optional[np.ndarray] = None     # (n,) row ids (None = anonymous)
+    logits: Optional[np.ndarray] = None
+    latency_ms: float = 0.0
+
+    @property
+    def labels(self) -> np.ndarray:
+        return np.argmax(self.logits, axis=-1)
+
+
+def make_request_stream(x_pool: np.ndarray, ids_pool: np.ndarray,
+                        n_requests: int, *, seed: int = 0,
+                        max_rows: int = 64, p_known: float = 0.5
+                        ) -> List[ServeRequest]:
+    """A mixed stream: request sizes uniform in [1, max_rows] (every size
+    appears — the naive per-size-jit baseline compiles once per distinct
+    size), rows drawn from the feature pool, and each request's ids kept
+    real with probability ``p_known`` (cache candidates) or replaced by
+    unseen ids (forced active-only)."""
+    rng = np.random.RandomState(seed)
+    x_pool = np.asarray(x_pool, np.float32)
+    ids_pool = np.asarray(ids_pool, np.int64)
+    reqs = []
+    for rid in range(n_requests):
+        n = int(rng.randint(1, max_rows + 1))
+        rows = rng.randint(0, len(x_pool), n)
+        ids = ids_pool[rows].copy()
+        unknown = rng.rand(n) >= p_known
+        ids[unknown] = -1 - rng.randint(0, 1 << 30, int(unknown.sum()))
+        reqs.append(ServeRequest(rid, x_pool[rows], ids))
+    return reqs
+
+
+def serve_stream(engine: VFLServingEngine, requests: List[ServeRequest], *,
+                 coalesce: bool = True) -> dict:
+    """Drive a request list through the engine and return stream stats.
+
+    ``coalesce=True`` greedily packs consecutive requests into one
+    micro-batch up to the largest bucket (the batched-serving mode);
+    ``False`` dispatches one request per engine call (still bucketed).
+    Latency is *service time* — the wall-clock of the micro-batch that
+    completed the request, i.e. what the user waits on top of queueing —
+    recorded per request so p50/p99 reflect the request mix."""
+    t_start = time.perf_counter()
+    max_rows = engine.bucketer.max
+    i = 0
+    while i < len(requests):
+        group = [requests[i]]
+        rows = len(requests[i].x)
+        i += 1
+        if coalesce:
+            while i < len(requests) and \
+                    rows + len(requests[i].x) <= max_rows:
+                group.append(requests[i])
+                rows += len(requests[i].x)
+                i += 1
+        t0 = time.perf_counter()
+        x = np.concatenate([r.x for r in group])
+        if any(r.ids is not None for r in group):
+            # anonymous requests ride along under the never-matching
+            # filler id, so an id-carrying neighbor keeps its cache
+            # routing whatever it was coalesced with
+            ids = np.concatenate([
+                r.ids if r.ids is not None
+                else np.full(len(r.x), ANON_ID, np.int64) for r in group])
+        else:
+            ids = None
+        logits = engine.predict(x, ids)
+        dt_ms = (time.perf_counter() - t0) * 1e3
+        off = 0
+        for r in group:
+            r.logits = logits[off:off + len(r.x)]
+            off += len(r.x)
+            r.latency_ms = dt_ms
+            engine.stats.latencies_ms.append(dt_ms)
+        engine.stats.requests += len(group)
+    wall_s = time.perf_counter() - t_start
+    total_rows = int(sum(len(r.x) for r in requests))
+    return {
+        "requests": len(requests),
+        "rows": total_rows,
+        "wall_s": round(wall_s, 4),
+        "rows_per_s": round(total_rows / max(wall_s, 1e-9), 1),
+        "requests_per_s": round(len(requests) / max(wall_s, 1e-9), 1),
+        "latency_ms_p50": round(engine.stats.percentile_ms(50), 3),
+        "latency_ms_p99": round(engine.stats.percentile_ms(99), 3),
+        "cache_hit_rate": (round(engine.cache.hit_rate, 4)
+                           if engine.cache else None),
+        "dispatches": dict(engine.stats.dispatches),
+        "padded_rows": engine.stats.padded_rows,
+        "compiled": engine.compiled_shapes(),
+        "jit_cache_sizes": engine.jit_cache_sizes(),
+    }

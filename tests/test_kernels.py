@@ -75,6 +75,55 @@ def test_fused_distill_sweep(B, D, M, kind, dtype):
     assert abs(float(got) - float(ref)) < tol
 
 
+@pytest.mark.parametrize("kind", ["mse", "mae"])
+def test_fused_distill_grads_match_reference(kind):
+    """The closed-form custom VJP (Eq. 5 backward) must match autodiff
+    through the pure-jnp oracle w.r.t. every differentiable input."""
+    key = jax.random.PRNGKey(17)
+    ks = jax.random.split(key, 5)
+    B, D, M = 200, 23, 16
+    x = jax.random.normal(ks[0], (B, D))
+    xh = jax.random.normal(ks[1], (B, D))
+    z = jax.random.normal(ks[2], (B, M))
+    zt = jax.random.normal(ks[3], (B, M))
+    mask = (jax.random.uniform(ks[4], (B,)) > 0.4).astype(jnp.float32)
+
+    def fused(x, xh, z, zt, m):
+        return jnp.mean(fused_distill_rows(x, xh, z, zt, m, lam=0.05,
+                                           kind=kind, interpret=True))
+
+    def ref(x, xh, z, zt, m):
+        return fused_distill_loss_ref(x, xh, z, zt, m, lam=0.05, kind=kind)
+
+    got = jax.grad(fused, argnums=(0, 1, 2, 3, 4))(x, xh, z, zt, mask)
+    want = jax.grad(ref, argnums=(0, 1, 2, 3, 4))(x, xh, z, zt, mask)
+    for g, w, name in zip(got, want, ("x", "x_hat", "z", "z_t", "mask")):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), atol=1e-6,
+                                   rtol=1e-5, err_msg=name)
+
+
+def test_distill_kernel_trains_under_value_and_grad():
+    """ROADMAP bug: the kernel path used to raise under autodiff.  One
+    value_and_grad step of the full make_loss(use_kernel=True) closure
+    must now run and agree with the reference closure's gradients."""
+    from repro.core import autoencoder as ae
+    from repro.core import distill
+    key = jax.random.PRNGKey(3)
+    params = ae.init_autoencoder(key, [12, 16, 8])
+    batch = {"x": jax.random.normal(key, (64, 12)),
+             "z_teacher": jax.random.normal(key, (64, 8)),
+             "aligned": (jax.random.uniform(key, (64,)) > 0.5).astype(
+                 jnp.float32)}
+    vk, gk = jax.value_and_grad(distill.make_loss(use_kernel=True))(
+        params, batch)
+    vr, gr = jax.value_and_grad(distill.make_loss(use_kernel=False))(
+        params, batch)
+    assert abs(float(vk) - float(vr)) < 1e-6
+    for a, b in zip(jax.tree.leaves(gk), jax.tree.leaves(gr)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5,
+                                   rtol=1e-4)
+
+
 def test_fused_distill_unaligned_rows_ignore_teacher():
     """Rows with mask=0 must be pure reconstruction loss (Eq. 5 case 2)."""
     key = jax.random.PRNGKey(9)

@@ -136,6 +136,30 @@ def test_make_lanes_loss_equals_make_loss_without_padding():
     assert abs(a - b) < 1e-6
 
 
+@pytest.mark.parametrize("kind", ["mse", "mae"])
+def test_make_lanes_loss_kernel_matches_reference(kind):
+    """The fused-kernel lanes loss (Pallas fwd + closed-form VJP) must
+    equal the reference lanes formula in value AND gradient, including
+    under feature padding and zero-weight rows (the masked-column rescale
+    trick is exact for 0/1 masks)."""
+    key = jax.random.PRNGKey(7)
+    params = ae.init_autoencoder(key, [10, 16, 4])
+    x = jax.random.normal(key, (24, 10))
+    fm = jnp.asarray([1.0] * 7 + [0.0] * 3)          # 3 padded columns
+    rw = jnp.asarray([1.0] * 20 + [0.0] * 4)         # 4 padded rows
+    batch = {"x": x * fm, "z_teacher": jax.random.normal(key, (24, 4)),
+             "aligned": (jax.random.uniform(key, (24,)) > 0.4).astype(
+                 jnp.float32),
+             "mask": fm, "row_w": rw}
+    ref_fn = distill.make_lanes_loss(lam=0.3, kind=kind)
+    ker_fn = distill.make_lanes_loss(lam=0.3, kind=kind, use_kernel=True)
+    vr, gr = jax.value_and_grad(ref_fn)(params, batch)
+    vk, gk = jax.value_and_grad(ker_fn)(params, batch)
+    assert abs(float(vr) - float(vk)) < 1e-6
+    assert _max_leaf_diff(gr, gk) < 1e-5
+    assert ref_fn.cache_key != ker_fn.cache_key    # distinct engines
+
+
 # ---------------------------------------------------------------------------
 # replicated pipeline parity
 # ---------------------------------------------------------------------------
@@ -194,6 +218,68 @@ def test_replicated_seed_scenario_count_mismatch_raises(replica_cells):
     scs, _ = replica_cells
     with pytest.raises(ValueError, match="scenarios for"):
         pipeline.run_apcvfl_replicated(scs, seeds=[0], max_epochs=2)
+
+
+def test_run_apcvfl_replicated_use_kernel_runs_lanes(replica_cells):
+    """ROADMAP follow-up: use_kernel seed groups used to fall back to
+    sequential protocol runs.  With the kernel's custom VJP the lanes
+    path trains the fused Eq. 5 directly and must match the sequential
+    kernel path like any other replica run."""
+    scs, seeds = replica_cells
+    kw = dict(max_epochs=2, use_kernel=True)
+    rep = pipeline.run_apcvfl_replicated(scs, seeds=seeds, **kw)
+    seq = [pipeline.run_apcvfl(sc, seed=s, **kw)
+           for sc, s in zip(scs, seeds)]
+    for a, b in zip(seq, rep):
+        assert a.epochs == b.epochs and a.comm == b.comm
+        assert _max_leaf_diff(a.params["g3"], b.params["g3"]) < 1e-4
+        for k in a.metrics:
+            assert abs(a.metrics[k] - b.metrics[k]) < METRIC_TOL, (k,)
+
+
+# ---------------------------------------------------------------------------
+# K-party replica lanes (ROADMAP follow-up: run_apcvfl_k seed groups)
+# ---------------------------------------------------------------------------
+
+def test_run_apcvfl_k_replicated_matches_sequential():
+    from repro.core import multiparty
+    from repro.data.synthetic import make_dataset
+    ds = make_dataset("bcw", seed=0)
+    sc = multiparty.make_scenario_k(ds, n_parties=3, n_active_features=5,
+                                    n_aligned=120, seed=0)
+    seeds = [0, 1]
+    seq = [multiparty.run_apcvfl_k(sc, seed=s, max_epochs=2)
+           for s in seeds]
+    rep = multiparty.run_apcvfl_k_replicated(sc, seeds=seeds, max_epochs=2)
+    assert [r.seed for r in rep] == seeds
+    for a, b in zip(seq, rep):
+        assert a.epochs == b.epochs           # incl. per-passive g1 lanes
+        assert a.comm == b.comm               # K-1 links, byte-identical
+        assert a.rounds == b.rounds and a.z_dim == b.z_dim
+        assert _max_leaf_diff(a.params["g3"], b.params["g3"]) < 1e-4
+        for k in a.metrics:
+            assert abs(a.metrics[k] - b.metrics[k]) < METRIC_TOL, (k,)
+
+
+def test_sweep_kparty_seed_groups_use_replica_dispatch(monkeypatch):
+    """A K>2 seed group must route through run_apcvfl_k_replicated (one
+    lanes dispatch), not the sequential per-seed fallback."""
+    from repro.core import multiparty
+    calls = {"n": 0}
+    real = multiparty.run_apcvfl_k_replicated
+
+    def spy(*a, **k):
+        calls["n"] += 1
+        return real(*a, **k)
+
+    monkeypatch.setattr(multiparty, "run_apcvfl_k_replicated", spy)
+    spec = ExperimentSpec(
+        name="k-replica", dataset="bcw", aligned=(120,), n_parties=(3,),
+        seeds=(0, 1), methods=(MethodSpec("apcvfl"),),
+        overrides={"max_epochs": 1})
+    results = sweep(spec)
+    assert calls["n"] == 1                     # whole group, one dispatch
+    assert [r.seed for r in results] == [0, 1]
 
 
 # ---------------------------------------------------------------------------

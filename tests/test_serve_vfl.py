@@ -1,0 +1,272 @@
+"""Online VFL inference subsystem tests (``repro.serve.vfl``): ModelBundle
+checkpoint round-trip, serving parity against the training-time evaluator,
+the batch bucketer's compile-count promise, representation-cache routing,
+the ``serve_smoke`` experiment record, and example-spec validity.
+
+One small model is trained once per module (2 epochs — serving correctness
+does not depend on convergence) and every test reuses it.
+"""
+import glob
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt
+from repro.core import autoencoder as ae
+from repro.core import classifier as clf
+from repro.core import pipeline
+from repro.experiments import ExperimentSpec, MethodSpec, get_method, sweep
+from repro.experiments.specs import ScenarioSpec
+from repro.experiments.sweeps import build_scenario
+from repro.serve import vfl as sv
+
+SPEC_DIR = os.path.join(os.path.dirname(__file__), os.pardir, "examples",
+                        "specs")
+
+
+@pytest.fixture(scope="module")
+def trained():
+    sc = build_scenario(ScenarioSpec(dataset="bcw", n_aligned=120,
+                                     n_active_features=5, seed=0))
+    result = pipeline.run_apcvfl(sc, seed=0, max_epochs=2)
+    bundle = sv.export_bundle(result, sc)
+    return sc, result, bundle
+
+
+# ---------------------------------------------------------------------------
+# export + checkpoint round-trip
+# ---------------------------------------------------------------------------
+
+def test_export_captures_all_active_party_state(trained):
+    sc, result, bundle = trained
+    assert bundle.supports_collaborative
+    assert set(result.params) == {"g3", "g1_active", "g2"}
+    assert len(bundle.cache_ids) == sc.n_aligned
+    assert bundle.cache_z.shape[0] == sc.n_aligned
+    assert bundle.meta["n_classes"] == sc.n_classes
+    assert bundle.meta["z_dim"] == result.z_dim
+
+
+def test_bundle_roundtrip_bit_identical_predictions(trained, tmp_path):
+    sc, _, bundle = trained
+    path = str(tmp_path / "bundle")
+    bundle.save(path)
+    loaded = sv.ModelBundle.load(path)
+    x = sc.active.x[:50]
+    ids = np.concatenate([bundle.cache_ids[:10],
+                          -np.arange(1, 41, dtype=np.int64)])
+    a = sv.VFLServingEngine(bundle).predict(x, ids)
+    b = sv.VFLServingEngine(loaded).predict(x, ids)
+    assert np.array_equal(a, b)                  # bit-identical, both paths
+    assert loaded.cache_ids.dtype == np.int64    # ids survive un-downcast
+    assert np.array_equal(loaded.cache_ids, bundle.cache_ids)
+
+
+def test_ckpt_load_tree_roundtrip(tmp_path):
+    tree = {"a": {"w0": np.arange(6, dtype=np.float32).reshape(2, 3)},
+            "ids": np.asarray([5, 7, 1 << 40], np.int64)}
+    path = str(tmp_path / "t")
+    ckpt.save(path, tree, meta={"k": 1})
+    got, side = ckpt.load_tree(path)
+    assert side["meta"] == {"k": 1}
+    assert np.array_equal(got["a"]["w0"], tree["a"]["w0"])
+    assert got["ids"].dtype == np.int64          # host arrays: no downcast
+    assert np.array_equal(got["ids"], tree["ids"])
+
+
+# ---------------------------------------------------------------------------
+# serving parity (the acceptance bound: 1e-6 vs the training-time eval)
+# ---------------------------------------------------------------------------
+
+def test_active_path_matches_pipeline_eval_logits(trained):
+    sc, result, bundle = trained
+    engine = sv.VFLServingEngine(bundle)
+    x = np.asarray(sc.active.x[:77], np.float32)       # not a bucket size
+    got = engine.predict_active(x)
+    want = np.asarray(clf.logreg_logits(
+        bundle.head_active, ae.encode(result.params["g3"],
+                                      jnp.asarray(x))))
+    assert np.max(np.abs(got - want)) < 1e-6
+
+
+def test_collaborative_path_matches_joint_teacher(trained):
+    sc, result, bundle = trained
+    engine = sv.VFLServingEngine(bundle)
+    ids = bundle.cache_ids[:12]
+    pos = {int(v): i for i, v in enumerate(np.asarray(sc.active.ids))}
+    rows = np.asarray([pos[int(i)] for i in ids])
+    x = np.asarray(sc.active.x[rows], np.float32)
+    got = engine.predict(x, ids)
+    za = ae.encode(result.params["g1_active"], jnp.asarray(x))
+    zj = jnp.concatenate([za, jnp.asarray(bundle.cache_z[:12])],
+                         axis=1).astype(jnp.float32)
+    want = np.asarray(clf.logreg_logits(
+        bundle.head_joint, ae.encode(result.params["g2"], zj)))
+    assert np.max(np.abs(got - want)) < 1e-4     # cross-batch-shape noise
+    assert engine.cache.hits == 12 and engine.cache.misses == 0
+
+
+def test_scaler_is_applied(trained):
+    sc, _, bundle = trained
+    import dataclasses
+    x = np.asarray(sc.active.x[:20], np.float32)
+    mean = np.full(x.shape[1], 2.5, np.float32)
+    scale = np.full(x.shape[1], 3.0, np.float32)
+    scaled = dataclasses.replace(bundle, x_mean=mean, x_scale=scale)
+    got = sv.VFLServingEngine(scaled).predict_active(x * scale + mean)
+    want = sv.VFLServingEngine(bundle).predict_active(x)
+    assert np.max(np.abs(got - want)) < 1e-3
+
+
+# ---------------------------------------------------------------------------
+# bucketer + routing
+# ---------------------------------------------------------------------------
+
+def test_bucketer_fit_and_split():
+    b = sv.BatchBucketer((16, 32, 64))
+    assert b.fit(1) == 16 and b.fit(16) == 16 and b.fit(17) == 32
+    assert b.split(5) == [(0, 5, 16)]
+    assert b.split(64) == [(0, 64, 64)]
+    assert b.split(150) == [(0, 64, 64), (64, 64, 64), (128, 22, 32)]
+    with pytest.raises(ValueError, match="exceeds largest"):
+        b.fit(65)
+    with pytest.raises(ValueError, match="positive"):
+        sv.BatchBucketer(())
+
+
+def test_mixed_stream_compiles_bounded_shapes(trained):
+    """The bucketer promise: whatever the request-size mix, distinct
+    dispatched batch shapes stay within the bucket set (and so does the
+    XLA executable count per path)."""
+    sc, _, bundle = trained
+    engine = sv.VFLServingEngine(bundle)
+    reqs = sv.make_request_stream(sc.active.x, sc.active.ids, 150, seed=2,
+                                  max_rows=60, p_known=0.4)
+    stats = sv.serve_stream(engine, reqs)
+    n_buckets = len(engine.bucketer.buckets)
+    assert stats["compiled"]["distinct_batch_shapes"] <= n_buckets
+    for sizes in stats["compiled"]["by_path"].values():
+        assert set(sizes) <= set(engine.bucketer.buckets)
+    for path, n in stats["jit_cache_sizes"].items():
+        assert n <= n_buckets, (path, n)
+    assert stats["rows"] == sum(len(r.x) for r in reqs)
+    assert all(r.logits is not None and len(r.logits) == len(r.x)
+               for r in reqs)
+
+
+def test_predict_routes_rows_in_order(trained):
+    """Mixed known/unknown ids: each row's logits must equal its own
+    path's output, reassembled in request-row order."""
+    sc, _, bundle = trained
+    engine = sv.VFLServingEngine(bundle)
+    ids = np.asarray([int(bundle.cache_ids[0]), -1,
+                      int(bundle.cache_ids[1]), -2, -3], np.int64)
+    pos = {int(v): i for i, v in enumerate(np.asarray(sc.active.ids))}
+    rows = np.asarray([pos.get(int(i), 0) for i in ids])
+    x = np.asarray(sc.active.x[rows], np.float32)
+    got = engine.predict(x, ids)
+    known = np.asarray([0, 2])
+    unknown = np.asarray([1, 3, 4])
+    want_known = engine.predict(x[known], ids[known])
+    want_unknown = engine.predict_active(x[unknown])
+    assert np.max(np.abs(got[known] - want_known)) < 1e-4
+    assert np.max(np.abs(got[unknown] - want_unknown)) < 1e-4
+
+
+def test_coalesced_anonymous_request_keeps_neighbor_cache_routing(trained):
+    """Regression: an id-carrying request coalesced with an ids=None
+    request must keep its collaborative routing (anonymous rows ride
+    along under the never-matching filler id) — predictions must not
+    depend on queue neighbors."""
+    sc, _, bundle = trained
+    pos = {int(v): i for i, v in enumerate(np.asarray(sc.active.ids))}
+    ids = bundle.cache_ids[:4]
+    rows = np.asarray([pos[int(i)] for i in ids])
+    known = sv.ServeRequest(0, np.asarray(sc.active.x[rows], np.float32),
+                            np.asarray(ids))
+    anon = sv.ServeRequest(1, np.asarray(sc.active.x[:3], np.float32),
+                           None)
+    engine = sv.VFLServingEngine(bundle)
+    sv.serve_stream(engine, [known, anon])       # one coalesced group
+    solo_engine = sv.VFLServingEngine(bundle)
+    want = solo_engine.predict(known.x, known.ids)
+    assert np.max(np.abs(known.logits - want)) < 1e-4
+    assert engine.cache.hits == 4                # routing really happened
+
+
+def test_empty_batch_returns_empty_logits(trained):
+    sc, _, bundle = trained
+    engine = sv.VFLServingEngine(bundle)
+    out = engine.predict_active(np.zeros((0, sc.active.x.shape[1])))
+    assert out.shape == (0, sc.n_classes)
+    out = engine.predict(np.zeros((0, sc.active.x.shape[1])),
+                         np.zeros((0,), np.int64))
+    assert out.shape == (0, sc.n_classes)
+
+
+def test_serving_boundary_validation(trained):
+    """ids/rows length mismatch and degenerate scalers are loud errors,
+    never silent garbage predictions."""
+    sc, _, bundle = trained
+    engine = sv.VFLServingEngine(bundle)
+    with pytest.raises(ValueError, match="ids for"):
+        engine.predict(np.asarray(sc.active.x[:4], np.float32),
+                       bundle.cache_ids[:2])
+    import dataclasses
+    bad = np.ones(sc.active.x.shape[1], np.float32)
+    bad[0] = 0.0
+    with pytest.raises(ValueError, match="finite and nonzero"):
+        sv.VFLServingEngine(dataclasses.replace(bundle, x_scale=bad))
+
+
+def test_bundle_without_collab_artifacts_serves_active_only(trained):
+    sc, _, _ = trained
+    result = pipeline.run_apcvfl(sc, seed=0, max_epochs=1, ablation=True)
+    bundle = sv.export_bundle(result, sc)
+    assert not bundle.supports_collaborative
+    engine = sv.VFLServingEngine(bundle)
+    ids = np.asarray(sc.active.ids[:5])          # ids given, no cache ->
+    out = engine.predict(sc.active.x[:5], ids)   # active-only fallback
+    assert out.shape == (5, sc.n_classes)
+    assert engine.cache is None
+    assert set(engine.stats.dispatches) == {"active"}
+
+
+# ---------------------------------------------------------------------------
+# experiment-layer integration + example specs
+# ---------------------------------------------------------------------------
+
+def test_serve_smoke_method_registered():
+    entry = get_method("serve_smoke")
+    assert entry.supports_multiparty
+    assert "max_epochs" in entry.accepts
+
+
+def test_serve_smoke_record_from_spec():
+    spec = ExperimentSpec(
+        name="serve", dataset="bcw", aligned=(120,), seeds=(0,),
+        methods=(MethodSpec("serve_smoke"),),
+        overrides={"max_epochs": 1})
+    (r,) = sweep(spec)
+    assert r.metrics["serve_parity_max_abs"] < 1e-6      # acceptance bound
+    assert r.metrics["serve_batch_shapes"] <= 6.0
+    assert r.metrics["serve_rows_per_s"] > 0
+    assert 0.0 <= r.metrics["serve_cache_hit_rate"] <= 1.0
+    assert "accuracy" in r.metrics                       # training metrics
+    rec = r.to_record()                                  # tidy row works
+    assert rec["serve_rows_per_s"] == r.metrics["serve_rows_per_s"]
+
+
+def test_all_example_specs_parse_and_name_known_methods():
+    paths = sorted(glob.glob(os.path.join(SPEC_DIR, "*.json")))
+    assert len(paths) >= 4                    # incl. the serving spec
+    for p in paths:
+        with open(p) as fh:
+            spec = ExperimentSpec.from_json(fh.read())
+        assert spec.methods, p
+        for m in spec.methods:
+            get_method(m.method)              # raises on unknown names
