@@ -24,15 +24,36 @@ machine-readable ``BENCH_sweep.json`` (wall-clock per path, engine
 steps/s, per-stage lane occupancy) so the perf trajectory accrues across
 PRs; CI uploads it as an artifact.
 
+Scale mode (``--scale``) is the million-row device-count sweep: a
+10^6-row x 8-party x multi-seed synthetic vertical partition
+(``data.scale.make_scale_lanes``, built device-resident) trained through
+the mesh-sharded fused lane engine (``train_lanes(..., mesh=...)``) at
+increasing device counts.  Each device count runs in a SUBPROCESS with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (the flag must be
+set before jax initializes), writing one cell; the parent aggregates the
+scaling curve into ``BENCH_scale.json``.  ``--smoke`` shrinks the grid
+for CI.  On a single physical CPU the fake devices share cores, so the
+curve demonstrates the sharding mechanism and its overhead, not a true
+speedup; on real multi-device hosts the same flag-free path shards
+across accelerators.
+
 Run:  PYTHONPATH=src python benchmarks/trainbench.py [--rows 4096]
       [--features 30] [--epochs 20] [--batches 32,64,128] [--csv]
       [--kparty] [--ks 2,4,8] [--sweep] [--seeds 5]
       [--out BENCH_sweep.json]
+      [--scale [--smoke] [--devices-list 1,2,4,8] [--parties 8]
+       [--scale-seeds 2] [--scale-bs 8192] [--dp 1]
+       [--scale-out BENCH_scale.json]]
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
+import re
+import subprocess
+import sys
+import tempfile
 import time
 
 import jax
@@ -255,6 +276,120 @@ def run_sweep(epochs: int = 30, seeds: int = 5, out_json="BENCH_sweep.json",
     return payload
 
 
+# ---------------------------------------------------------------------------
+# scale mode: million-row device-count sweep (BENCH_scale.json)
+# ---------------------------------------------------------------------------
+
+def run_scale_cell(*, devices: int, rows: int, parties: int, seeds: int,
+                   features: int, epochs: int, batch_size: int, dp: int,
+                   cell_out: str) -> dict:
+    """One device count, measured inside the subprocess that owns the
+    matching ``XLA_FLAGS``: generate the lanes device-resident, train all
+    party x seed lanes through the mesh-sharded fused engine, record
+    cold (compile+run) and warm wall clock."""
+    from repro.data.scale import make_scale_lanes
+    from repro.launch.mesh import make_lane_mesh
+
+    assert devices % dp == 0, (devices, dp)
+    mesh = make_lane_mesh(lane=devices // dp, data=dp)
+    t0 = time.time()
+    lanes = make_scale_lanes(rows, parties, n_features=features,
+                             seeds=tuple(range(seeds)), mesh=mesh)
+    jax.block_until_ready([sp.data["x"] for sp in lanes])
+    gen_s = time.time() - t0
+
+    kw = dict(batch_size=batch_size, max_epochs=epochs, patience=epochs,
+              mesh=mesh, shard_rows=dp > 1)
+    t0 = time.time()
+    results = training.train_lanes(lanes, ae.masked_recon_loss, **kw)
+    cold_s = time.time() - t0
+    t0 = time.time()
+    results = training.train_lanes(lanes, ae.masked_recon_loss, **kw)
+    warm_s = time.time() - t0
+
+    steps = int(sum(r.steps_run for r in results))
+    cell = {
+        "devices": devices,
+        "jax_device_count": jax.device_count(),
+        "mesh": {"lane": devices // dp, "data": dp},
+        "lanes": len(lanes),
+        "gen_s": round(gen_s, 3),
+        "train_cold_s": round(cold_s, 3),
+        "train_warm_s": round(warm_s, 3),
+        "steps": steps,
+        "steps_per_s_warm": round(steps / warm_s, 2),
+        "rows_per_s_warm": round(steps * batch_size / warm_s, 1),
+        "final_train_loss": float(np.mean([r.train_loss[-1]
+                                           for r in results])),
+    }
+    with open(cell_out, "w") as fh:
+        json.dump(cell, fh)
+    return cell
+
+
+def _cell_env(devices: int) -> dict:
+    """Child env with exactly one force_host_platform_device_count flag."""
+    env = dict(os.environ)
+    flags = re.sub(r"--xla_force_host_platform_device_count=\d+", "",
+                   env.get("XLA_FLAGS", "")).strip()
+    env["XLA_FLAGS"] = (f"{flags} --xla_force_host_platform_device_count="
+                        f"{devices}").strip()
+    return env
+
+
+def run_scale(*, rows: int = 1_000_000, parties: int = 8, seeds: int = 2,
+              features: int = 16, epochs: int = 2, batch_size: int = 8192,
+              dp: int = 1, device_counts=(1, 2, 4, 8),
+              out_json: str = "BENCH_scale.json", csv: bool = True) -> dict:
+    """Parent of the device-count sweep: one subprocess per device count
+    (``XLA_FLAGS`` must exist before jax initializes, so in-process
+    re-meshing is impossible), aggregated into ``out_json``."""
+    cells = []
+    for n in device_counts:
+        with tempfile.NamedTemporaryFile(suffix=".json", delete=False) as fh:
+            cell_out = fh.name
+        cmd = [sys.executable, os.path.abspath(__file__), "--scale-cell",
+               "--cell-devices", str(n), "--rows", str(rows),
+               "--parties", str(parties), "--scale-seeds", str(seeds),
+               "--features", str(features), "--epochs", str(epochs),
+               "--scale-bs", str(batch_size), "--dp", str(dp),
+               "--cell-out", cell_out]
+        t0 = time.time()
+        proc = subprocess.run(cmd, env=_cell_env(n))
+        if proc.returncode != 0:
+            raise RuntimeError(f"scale cell devices={n} failed "
+                               f"(exit {proc.returncode})")
+        with open(cell_out) as fh:
+            cell = json.load(fh)
+        os.unlink(cell_out)
+        cell["subprocess_s"] = round(time.time() - t0, 3)
+        cells.append(cell)
+        if csv:
+            print(f"trainbench/scale/dev{n},"
+                  f"{1e6 * cell['train_warm_s'] / max(cell['steps'], 1):.0f},"
+                  f"warm={cell['train_warm_s']:.2f}s|"
+                  f"cold={cell['train_cold_s']:.2f}s|"
+                  f"{cell['rows_per_s_warm']:.0f}rows/s", flush=True)
+
+    base = cells[0]["train_warm_s"]
+    payload = {
+        "grid": {"rows": rows, "parties": parties, "seeds": seeds,
+                 "lanes": parties * seeds, "features": features,
+                 "epochs": epochs, "batch_size": batch_size, "dp": dp,
+                 "device_counts": list(device_counts)},
+        "cells": cells,
+        "speedup_vs_1dev": {str(c["devices"]): round(base
+                                                     / c["train_warm_s"], 3)
+                            for c in cells},
+    }
+    if out_json:
+        with open(out_json, "w") as fh:
+            json.dump(payload, fh, indent=1)
+        if csv:
+            print(f"# wrote {out_json}", flush=True)
+    return payload
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--rows", type=int, default=4096)
@@ -273,8 +408,46 @@ def main() -> None:
                     help="seed replicas for the --sweep benchmark")
     ap.add_argument("--out", default="BENCH_sweep.json",
                     help="--sweep JSON output path ('' to skip)")
+    ap.add_argument("--scale", action="store_true",
+                    help="million-row device-count sweep through the "
+                         "mesh-sharded lane engine; writes --scale-out")
+    ap.add_argument("--smoke", action="store_true",
+                    help="shrink the --scale grid for CI")
+    ap.add_argument("--devices-list", default="",
+                    help="--scale device counts (default 1,2,4,8; "
+                         "smoke 1,2)")
+    ap.add_argument("--parties", type=int, default=None)
+    ap.add_argument("--scale-seeds", type=int, default=2)
+    ap.add_argument("--scale-bs", type=int, default=None)
+    ap.add_argument("--dp", type=int, default=1,
+                    help="row-sharding (data axis) devices per lane group")
+    ap.add_argument("--scale-out", default="BENCH_scale.json")
+    ap.add_argument("--scale-cell", action="store_true",
+                    help="internal: run one device-count cell in this "
+                         "process")
+    ap.add_argument("--cell-devices", type=int, default=1)
+    ap.add_argument("--cell-out", default="")
     args = ap.parse_args()
-    if args.sweep:
+    if args.scale_cell:
+        run_scale_cell(devices=args.cell_devices, rows=args.rows,
+                       parties=args.parties or 8, seeds=args.scale_seeds,
+                       features=args.features, epochs=args.epochs or 2,
+                       batch_size=args.scale_bs or 8192, dp=args.dp,
+                       cell_out=args.cell_out)
+    elif args.scale:
+        smoke = args.smoke
+        devs = ([int(d) for d in args.devices_list.split(",") if d]
+                or ([1, 2] if smoke else [1, 2, 4, 8]))
+        run_scale(
+            rows=args.rows if args.rows != 4096 else
+            (16_384 if smoke else 1_000_000),
+            parties=args.parties or (4 if smoke else 8),
+            seeds=args.scale_seeds,
+            features=args.features if args.features != 30 else 16,
+            epochs=args.epochs or 2,
+            batch_size=args.scale_bs or (512 if smoke else 8192),
+            dp=args.dp, device_counts=devs, out_json=args.scale_out)
+    elif args.sweep:
         run_sweep(epochs=args.epochs if args.epochs is not None else 30,
                   seeds=args.seeds, out_json=args.out)
     elif args.kparty:

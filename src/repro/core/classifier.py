@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import padding
 from repro.optim.adam import paper_adam
 
 
@@ -155,22 +156,18 @@ def f1_scores(y_true: np.ndarray, y_pred: np.ndarray, n_classes: int) -> dict:
 
 def _fold_arrays(n: int, k: int, seed: int):
     """The paper's fold assignment (seeded permutation + ``array_split``)
-    as padded index arrays: (k, max_tr) train indices + 0/1 weights
-    (padded slots gather row 0 at zero weight — inert) and (k, max_te)
-    test indices, plus the raw folds for host-side metric slicing."""
+    as padded index arrays (``core.padding.pad_index_rows`` — the same
+    zero-weight-row trick the lane engine uses): (k, max_tr) train indices
+    + 0/1 weights (padded slots gather row 0 at zero weight — inert) and
+    (k, max_te) test indices, plus the raw folds for host-side metric
+    slicing."""
     perm = np.random.RandomState(seed).permutation(n)
     folds = np.array_split(perm, k)
     te_lens = [len(f) for f in folds]
-    max_te = max(te_lens)
-    max_tr = n - min(te_lens)
-    tr_idx = np.zeros((k, max_tr), np.int32)
-    tr_w = np.zeros((k, max_tr), np.float32)
-    te_idx = np.zeros((k, max_te), np.int32)
-    for i in range(k):
-        tr = np.concatenate([folds[j] for j in range(k) if j != i])
-        tr_idx[i, :len(tr)] = tr
-        tr_w[i, :len(tr)] = 1.0
-        te_idx[i, :te_lens[i]] = folds[i]
+    trs = [np.concatenate([folds[j] for j in range(k) if j != i])
+           for i in range(k)]
+    tr_idx, tr_w = padding.pad_index_rows(trs)
+    te_idx, _ = padding.pad_index_rows(folds)
     return tr_idx, tr_w, te_idx, folds, te_lens
 
 

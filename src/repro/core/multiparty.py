@@ -222,7 +222,8 @@ def run_apcvfl_k_replicated(scenarios, *, seeds, lam: float = HP.lam,
                             max_epochs: int = HP.max_epochs,
                             patience: int = HP.patience, lr: float = HP.lr,
                             use_kernel: bool = False,
-                            ablation: bool = False) -> List[RunResult]:
+                            ablation: bool = False,
+                            mesh=None) -> List[RunResult]:
     """K-party protocol for S seed replicates of one grid cell, every
     stage one ``training.train_lanes`` dispatch: ALL parties of ALL seeds
     train their g1 stage as S*K lanes of one vmapped scan, then S g2
@@ -230,7 +231,8 @@ def run_apcvfl_k_replicated(scenarios, *, seeds, lam: float = HP.lam,
     ``pipeline.run_apcvfl_replicated`` (same contract: one scenario
     shared by every seed or one equal-shape scenario per seed; one
     ``RunResult`` per seed matching ``run_apcvfl_k(scenarios[i],
-    seed=seeds[i], ...)`` within lane tolerance)."""
+    seed=seeds[i], ...)`` within lane tolerance).  ``mesh`` shards every
+    stage's lane axis across devices (see ``training.train_lanes``)."""
     seeds = [int(s) for s in seeds]
     S = len(seeds)
     scs = ([scenarios] * S if isinstance(scenarios, VFLScenarioK)
@@ -241,7 +243,7 @@ def run_apcvfl_k_replicated(scenarios, *, seeds, lam: float = HP.lam,
     if S == 0:
         return []
     train_kw = dict(batch_size=batch_size, max_epochs=max_epochs,
-                    patience=patience, lr=lr)
+                    patience=patience, lr=lr, mesh=mesh)
     K = len(scs[0].passives) + 1
 
     aligns = [align_k(sc.active.ids, [p.ids for p in sc.passives])

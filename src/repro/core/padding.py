@@ -1,0 +1,69 @@
+"""Shared zero-padding utilities for lane stacking and fold batching.
+
+Two families of callers pad to common shapes so independent work items can
+share one vmapped computation:
+
+* the replica-lane training engine (``core.training``) zero-pads every
+  param/data leaf per-axis to the max shape across lanes and stacks along
+  a new leading lane axis (zero rows/cols feed zero inputs and receive
+  zero gradients, so each lane's real sub-block evolves exactly as it
+  would unpadded);
+* the k-fold probe (``core.classifier``) pads each fold's row-index lists
+  to a common length with index 0 at weight 0 (the padded gather is inert
+  under the weighted loss).
+
+Both used to carry private copies of this logic; this module is the one
+tested implementation.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def pad_to(arr: jax.Array, shape) -> jax.Array:
+    """Zero-pad ``arr`` at the end of every axis up to ``shape`` (a no-op
+    when the shapes already match).  Shrinking is not supported."""
+    pads = [(0, t - s) for s, t in zip(arr.shape, shape)]
+    if any(p < 0 for _, p in pads):
+        raise ValueError(f"pad_to: cannot shrink {arr.shape} to {shape}")
+    return jnp.pad(arr, pads) if any(p for _, p in pads) else arr
+
+
+def pad_stack(trees: Sequence):
+    """Zero-pad every leaf per-axis to the max shape across trees and stack
+    along a new leading lane axis, entirely on device (host leaves are
+    uploaded once here; device leaves — an earlier stage's encoder outputs
+    — never round-trip).  All trees must share one structure."""
+    treedef = jax.tree.structure(trees[0])
+    for t in trees[1:]:
+        if jax.tree.structure(t) != treedef:
+            raise ValueError("pad_stack: all trees must share one "
+                             "param/data tree structure")
+    leaves = [[jnp.asarray(l) for l in jax.tree.leaves(t)] for t in trees]
+    stacked = []
+    for pos in zip(*leaves):
+        target = tuple(max(l.shape[d] for l in pos)
+                       for d in range(pos[0].ndim))
+        stacked.append(jnp.stack([pad_to(l, target) for l in pos]))
+    return jax.tree.unflatten(treedef, stacked)
+
+
+def pad_index_rows(index_lists: Sequence[np.ndarray], *,
+                   min_len: int = 0) -> tuple:
+    """Pad variable-length host index arrays to one (k, max_len) int32
+    matrix plus matching float32 0/1 weights.  Padded slots point at row 0
+    with weight 0.0, so a gather through them is inert under any
+    row-weighted reduction (the k-fold probe's zero-weight-row trick)."""
+    k = len(index_lists)
+    lens = [len(ix) for ix in index_lists]
+    max_len = max([min_len] + lens)
+    idx = np.zeros((k, max_len), np.int32)
+    w = np.zeros((k, max_len), np.float32)
+    for i, ix in enumerate(index_lists):
+        idx[i, :len(ix)] = ix
+        w[i, :len(ix)] = 1.0
+    return idx, w

@@ -22,14 +22,18 @@ for K parties (this is the 2-lane special case).
 Stage handoffs are device-resident: encoder outputs feed the next stage as
 jax arrays (the lane engine gathers its train/val splits on device) and
 the channel accounting reads only shapes/dtypes, so the handoffs
-themselves add NO host round-trips — what remains is the engine's one
-early-stop sync per epoch and the final metrics evaluation
+themselves add NO host round-trips — what remains is the engine's single
+early-stop sync per FIT (the fused scan-of-scans engine keeps the whole
+epoch loop on device) and the final metrics evaluation
 (``clf.kfold_cv``, one sync for all folds).
 
 ``run_apcvfl_replicated`` runs S seed replicates of one grid cell through
 every stage together: each stage becomes S (or 2S, for the two g1s) lanes
 of one ``training.train_lanes`` call, so a whole multi-seed sweep cell
-costs one compile and one host sync per epoch instead of S of each.
+costs one compile and one host sync per stage instead of S of each.  Both
+``*_replicated`` entry points take an optional ``mesh``
+(``repro.launch.mesh.make_lane_mesh``) that shards every stage's lane
+axis across devices — same computation, device-parallel lanes.
 
 Hyperparameter defaults come from ``configs.apcvfl_paper.TABULAR`` (the
 paper's Appendix-B settings); every entry point returns the unified
@@ -168,7 +172,7 @@ def run_apcvfl_replicated(scenarios, *, seeds, lam: float = HP.lam,
                           max_epochs: int = HP.max_epochs,
                           patience: int = HP.patience, lr: float = HP.lr,
                           use_kernel: bool = False,
-                          ablation: bool = False) -> list:
+                          ablation: bool = False, mesh=None) -> list:
     """Full protocol for S seed replicates of one grid cell, every stage
     one ``training.train_lanes`` dispatch: the two g1s of all seeds run as
     2S lanes, g2 as S lanes, g3 as S lanes — one compile and one host sync
@@ -182,14 +186,16 @@ def run_apcvfl_replicated(scenarios, *, seeds, lam: float = HP.lam,
     tolerance (per-lane trajectories are lane-local; tests/test_replicas.py
     pins the parity).  ``use_kernel=True`` runs the g3 lanes through the
     fused Eq. 5 Pallas kernel (``distill.make_lanes_loss(use_kernel=True)``
-    — trainable since the kernel grew its closed-form custom VJP)."""
+    — trainable since the kernel grew its closed-form custom VJP).
+    ``mesh`` shards every stage's lane axis across devices (see
+    ``training.train_lanes``)."""
     scs, seeds = _normalize_replicas("run_apcvfl_replicated", scenarios,
                                      seeds)
     S = len(seeds)
     if S == 0:
         return []
     train_kw = dict(batch_size=batch_size, max_epochs=max_epochs,
-                    patience=patience, lr=lr)
+                    patience=patience, lr=lr, mesh=mesh)
 
     channels = [comm.Channel() for _ in range(S)]
     psis = [psi(sc.active.ids, sc.passive.ids, channel=ch)
@@ -353,8 +359,8 @@ def run_apcvfl_aligned_only_replicated(scenarios, *, seeds,
                                        max_epochs: int = HP.max_epochs,
                                        patience: int = HP.patience,
                                        lr: float = HP.lr,
-                                       test_size: int = HP.test_size
-                                       ) -> list:
+                                       test_size: int = HP.test_size,
+                                       mesh=None) -> list:
     """S seed replicates of the aligned-only adaptation, every stage one
     ``train_lanes`` dispatch (2S g1 lanes, S g2 lanes).  Both of its
     stages are dispatch-bound at tabular shapes, so this is the replica
@@ -362,14 +368,14 @@ def run_apcvfl_aligned_only_replicated(scenarios, *, seeds,
     ``benchmarks/trainbench.py --sweep``).  Same contract as
     ``run_apcvfl_replicated``: one scenario shared or one per seed, one
     ``RunResult`` per seed matching the sequential path within lane
-    tolerance."""
+    tolerance.  ``mesh`` shards every stage's lane axis across devices."""
     scs, seeds = _normalize_replicas("run_apcvfl_aligned_only_replicated",
                                      scenarios, seeds)
     S = len(seeds)
     if S == 0:
         return []
     train_kw = dict(batch_size=batch_size, max_epochs=max_epochs,
-                    patience=patience, lr=lr)
+                    patience=patience, lr=lr, mesh=mesh)
 
     channels = [comm.Channel() for _ in range(S)]
     keys = [jax.random.split(jax.random.PRNGKey(s), 3) for s in seeds]

@@ -1,11 +1,12 @@
-"""Device-resident mini-batch training engine for the tabular APC-VFL stack.
+"""Device-resident scan-of-scans training engine for the tabular APC-VFL
+stack.
 
 Optimization is the paper's Adam (Kingma & Ba defaults, Appendix B) via
 :mod:`repro.optim.adam`, <=200 epochs, early stopping on a 10% validation
 split with patience 10.
 
-Data-layout contract (the scan engine)
---------------------------------------
+Data-layout contract (the fused fit engine)
+-------------------------------------------
 ``train`` takes ``data`` as a dict of equal-length, row-aligned host arrays.
 The engine:
 
@@ -13,12 +14,15 @@ The engine:
    identical split to the legacy loop) and uploads both sides to device ONCE;
 2. draws each epoch's row permutation on device with ``jax.random``
    (``fold_in(PRNGKey(seed), epoch)``);
-3. runs the WHOLE epoch as a single ``jax.lax.scan`` over
-   ``(n_batches, batch_size)`` index slices inside one jitted call, with the
-   params and optimizer buffers donated epoch-to-epoch;
-4. computes the validation loss inside the same jitted call, so exactly ONE
-   host sync per epoch (the two scalar losses) remains for early-stopping
-   bookkeeping.
+3. runs the WHOLE FIT as one jitted scan-of-scans: an outer ``lax.scan``
+   over epochs whose carry holds the early-stop state (best-val params,
+   best val loss, epochs-since-best, a ``live`` flag, epochs run) as
+   traced values, and an inner ``lax.scan`` over ``(n_batches,
+   batch_size)`` index slices for the epoch itself;
+4. wraps the epoch body in ``lax.cond(live, ...)`` so once early stopping
+   fires, the remaining outer iterations are cheap passthroughs — and the
+   host syncs exactly ONCE per fit (epoch count + loss histories), not
+   once per epoch.
 
 Batching semantics: ``batch_size`` is clamped to the train-split size and the
 epoch DROPS the remainder rows of the permutation (``n_batches = n_tr // bs``)
@@ -27,25 +31,29 @@ stored-trace oracle (``tests/data/train_trace.json``): a committed loss
 trajectory recorded from this engine, which any semantic change to the
 split, permutation, loss, or optimizer math will break.
 
-``epoch_callback(epoch, params, train_loss, val_loss)`` receives a defensive
-copy of the params (the engine's own buffers are donated into the next
-epoch), so callbacks may stash them across epochs; the copy is only made
-when a callback is registered.
+The pre-fusion per-epoch loop survives as ``train_epochwise`` /
+``train_lanes_epochwise``: it is the live parity oracle for the fused
+engine (``tests/test_training_engine.py`` pins exact epoch counts and
+best-val params on the stored-trace workloads) and the only path that can
+run ``epoch_callback(epoch, params, train_loss, val_loss)`` — callbacks
+need params on the host every epoch, which is precisely the sync the fused
+engine removes, so ``train`` transparently routes callback users there.
 
-Compilation caching: one jitted epoch function exists per
+Compilation caching: one jitted fit function exists per
 ``(loss identity, lr)`` — closures built by ``distill.make_loss`` carry a
 semantic ``cache_key`` attribute so repeated stages reuse the same compiled
-engine instead of re-tracing (see ``get_engine``).
+engine instead of re-tracing (see ``get_engine`` / ``get_fit_engine``).
 
 Replica-lane training (``train_lanes``)
 ---------------------------------------
 A *lane* is any independent training instance — a federated party's g1
 stage, a seed replicate of the same stage, a CV fold.  ``train_lanes``
-runs L lanes as ONE vmapped scan: one upload, one compile, one host sync
-per epoch for ALL lanes.  K-party batching (PR 2's ``train_many``) is the
-K-lane special case; seed replication stacks S replicates of every stage
-into S x K lanes through the very same engine (``core.pipeline``'s
-``run_apcvfl_replicated`` does exactly this).  The padded-stack layout:
+runs L lanes as ONE vmapped scan-of-scans: one upload, one compile, one
+host sync per fit for ALL lanes.  K-party batching (PR 2's ``train_many``)
+is the K-lane special case; seed replication stacks S replicates of every
+stage into S x K lanes through the very same engine (``core.pipeline``'s
+``run_apcvfl_replicated`` does exactly this).  The padded-stack layout
+(:mod:`repro.core.padding`):
 
 * every param leaf is zero-padded per-axis to the max shape across lanes
   and stacked along a leading lane axis (zero rows/cols feed on zero
@@ -66,8 +74,9 @@ into S x K lanes through the very same engine (``core.pipeline``'s
   past a lane's own budget;
 * early stopping is a per-lane ``live`` mask (mirroring the masked-loss
   trick in ``distill.make_loss``): converged lanes keep stepping on
-  frozen params so the batch shape stays static, and the epoch loop ends
-  when every lane has stopped.
+  frozen params so the batch shape stays static, and the outer scan's
+  ``lax.cond(any(live), ...)`` skips whole epochs once every lane has
+  stopped.
 
 The shared batch size is clamped to the SMALLEST lane's train split so
 every lane runs at least one step per epoch.  For a lane whose row count
@@ -77,11 +86,21 @@ permutation as ``train`` (same fold_in key); when additionally
 results match the sequential path to float tolerance — the parity tests in
 ``tests/test_train_many.py`` and ``tests/test_replicas.py`` pin this.
 
-``train_many`` and ``PartySpec`` remain as aliases of ``train_lanes`` and
-``LaneSpec`` (the K-party call sites read naturally with either name).
-The original per-batch host loop (``train_legacy``) soaked as a live
-parity oracle through PRs 1-2 and is now retired; its role is covered by
-the stored-trace oracle above.
+Mesh sharding (``train_lanes(..., mesh=...)``)
+----------------------------------------------
+Lanes are embarrassingly parallel, so the lane axis shards across devices
+by *computation following data*: pass a mesh from
+``repro.launch.mesh.make_lane_mesh`` (axes ``("lane", "data")``) and every
+stacked input is ``device_put`` with a ``NamedSharding`` resolved through
+the logical-axis policy (``repro.sharding.policy`` — lane axis ->
+``"lane"``, rows -> ``"dp"`` when ``shard_rows=True``).  The SAME jitted
+engine then runs device-parallel — jit specializes on the input shardings,
+the computation is bitwise the computation the unsharded path runs, so
+parity is exact.  The lane count is padded up to a multiple of the mesh's
+lane-axis size with dead lanes (``live=False``, zero step budget) that are
+stripped from the results; row sharding silently drops to replicated on
+dims the mesh does not divide (``policy._divisible``), because padding
+rows would change the device permutation and break parity.
 """
 from __future__ import annotations
 
@@ -93,6 +112,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import padding
 from repro.optim.adam import paper_adam
 
 
@@ -119,9 +139,13 @@ class LaneSpec:
 
 PartySpec = LaneSpec     # the K-party special case, kept by its PR-2 name
 
+# the pre-dedup names, kept so downstream code reads either way
+_pad_to = padding.pad_to
+_pad_stack = padding.pad_stack
+
 
 # ---------------------------------------------------------------------------
-# the scan engine
+# engine cache
 # ---------------------------------------------------------------------------
 
 _ENGINE_CACHE: dict = {}
@@ -137,6 +161,21 @@ def loss_cache_key(loss_fn):
     ``train`` call) — tag them if they are built in a loop."""
     return getattr(loss_fn, "cache_key", loss_fn)
 
+
+def _cached_engine(tag: str, loss_fn: Callable, lr: float, builder):
+    key = (tag, loss_cache_key(loss_fn), float(lr))
+    engine = _ENGINE_CACHE.get(key)
+    if engine is None:
+        while len(_ENGINE_CACHE) >= _ENGINE_CACHE_MAX:
+            _ENGINE_CACHE.pop(next(iter(_ENGINE_CACHE)))
+        engine = builder(loss_fn, float(lr))
+        _ENGINE_CACHE[key] = engine
+    return engine
+
+
+# ---------------------------------------------------------------------------
+# per-epoch engines (the epochwise parity oracle + callback path)
+# ---------------------------------------------------------------------------
 
 def _build_engine(loss_fn: Callable, lr: float):
     opt = paper_adam(lr)
@@ -162,17 +201,6 @@ def _build_engine(loss_fn: Callable, lr: float):
     return run_epoch
 
 
-def _cached_engine(tag: str, loss_fn: Callable, lr: float, builder):
-    key = (tag, loss_cache_key(loss_fn), float(lr))
-    engine = _ENGINE_CACHE.get(key)
-    if engine is None:
-        while len(_ENGINE_CACHE) >= _ENGINE_CACHE_MAX:
-            _ENGINE_CACHE.pop(next(iter(_ENGINE_CACHE)))
-        engine = builder(loss_fn, float(lr))
-        _ENGINE_CACHE[key] = engine
-    return engine
-
-
 def get_engine(loss_fn: Callable, *, lr: float = 1e-3):
     """Jitted epoch runner for ``loss_fn``, cached on (loss identity, lr)."""
     return _cached_engine("train", loss_fn, lr, _build_engine)
@@ -187,13 +215,156 @@ def get_lanes_engine(loss_fn: Callable, *, lr: float = 1e-3):
 get_many_engine = get_lanes_engine   # pre-lane-engine name
 
 
-def train(params, data: dict, loss_fn: Callable, *, batch_size: int = 128,
-          max_epochs: int = 200, patience: int = 10, lr: float = 1e-3,
-          val_frac: float = 0.1, seed: int = 0,
-          epoch_callback: Optional[Callable] = None) -> TrainResult:
-    """data: dict of equal-length arrays (row-aligned). loss_fn(params, batch).
+# ---------------------------------------------------------------------------
+# fused whole-fit engines (outer epoch scan, one host sync per fit)
+# ---------------------------------------------------------------------------
 
-    See the module docstring for the device-residency / batching contract."""
+def _build_fit_engine(loss_fn: Callable, lr: float):
+    opt = paper_adam(lr)
+
+    @partial(jax.jit, static_argnames=("n_batches", "batch_size",
+                                       "max_epochs", "patience"))
+    def run_fit(params, opt_state, base_key, tr, val, *, n_batches,
+                batch_size, max_epochs, patience):
+        n_tr = jax.tree.leaves(tr)[0].shape[0]
+
+        def epoch_body(carry, epoch):
+            p, s, best_p, best_v, since, live, epochs = carry
+            key = jax.random.fold_in(base_key, epoch)
+            perm = jax.random.permutation(key, n_tr)
+            idx = perm[: n_batches * batch_size].reshape(n_batches,
+                                                         batch_size)
+
+            def step(c, bidx):
+                p_, s_ = c
+                batch = {k: v[bidx] for k, v in tr.items()}
+                loss, grads = jax.value_and_grad(loss_fn)(p_, batch)
+                p_, s_, _ = opt.update(grads, s_, p_)
+                return (p_, s_), loss
+
+            (p, s), losses = jax.lax.scan(step, (p, s), idx)
+            tl = jnp.mean(losses)
+            vl = loss_fn(p, val)
+            # the epochwise loop's host bookkeeping, as traced values
+            improved = vl < best_v - 1e-6
+            best_p = jax.tree.map(lambda b, q: jnp.where(improved, q, b),
+                                  best_p, p)
+            best_v = jnp.where(improved, vl, best_v)
+            since = jnp.where(improved, 0, since + 1)
+            live = improved | (since < patience)
+            return (p, s, best_p, best_v, since, live, epochs + 1), (tl, vl)
+
+        def epoch_step(carry, epoch):
+            dead = lambda c: (c, (jnp.zeros((), jnp.float32),
+                                  jnp.zeros((), jnp.float32)))
+            return jax.lax.cond(carry[5],
+                                lambda c: epoch_body(c, epoch), dead, carry)
+
+        init = (params, opt_state, params,
+                jnp.asarray(jnp.inf, jnp.float32),
+                jnp.asarray(0, jnp.int32), jnp.asarray(True),
+                jnp.asarray(0, jnp.int32))
+        (_, _, best_p, _, _, _, epochs), (tls, vls) = jax.lax.scan(
+            epoch_step, init, jnp.arange(max_epochs))
+        return best_p, epochs, tls, vls
+
+    return run_fit
+
+
+def get_fit_engine(loss_fn: Callable, *, lr: float = 1e-3):
+    """Jitted whole-fit runner (scan-of-scans), cached like
+    ``get_engine``."""
+    return _cached_engine("fit", loss_fn, lr, _build_fit_engine)
+
+
+def _build_lanes_fit_engine(loss_fn: Callable, lr: float):
+    opt = paper_adam(lr)
+
+    @partial(jax.jit, static_argnames=("n_batches", "batch_size",
+                                       "max_epochs", "patience"))
+    def run_fit_k(params, opt_state, base_keys, tr, val, n_tr, nb, live0, *,
+                  n_batches, batch_size, max_epochs, patience):
+        L = base_keys.shape[0]
+
+        def lane_epoch(p, s, key, live_p, tr_p, val_p, n_tr_p, nb_p):
+            n_max = tr_p["x"].shape[0]
+            perm = jax.random.permutation(key, n_max)
+            # stable-partition real rows (< n_tr_p) to the front: for an
+            # unpadded lane this is exactly the solo engine's permutation,
+            # so the two paths draw identical mini-batches
+            order = perm[jnp.argsort(perm >= n_tr_p, stable=True)]
+            idx = order[: n_batches * batch_size].reshape(n_batches,
+                                                          batch_size)
+
+            def step(carry, xs):
+                p_, s_ = carry
+                i, bidx = xs
+                batch = {k: v[bidx] for k, v in tr_p.items() if k != "mask"}
+                batch["mask"] = tr_p["mask"]
+                batch["row_w"] = jnp.ones((batch_size,), jnp.float32)
+                loss, grads = jax.value_and_grad(loss_fn)(p_, batch)
+                p2, s2, _ = opt.update(grads, s_, p_)
+                # freeze past this lane's own step budget or after its
+                # early stop — the masked-select twin of distill.make_loss
+                on = live_p & (i < nb_p)
+                sel = lambda a, b: jnp.where(on, a, b)
+                return ((jax.tree.map(sel, p2, p_),
+                         jax.tree.map(sel, s2, s_)),
+                        jnp.where(on, loss, 0.0))
+
+            (p, s), losses = jax.lax.scan(step, (p, s),
+                                          (jnp.arange(n_batches), idx))
+            tl = jnp.sum(losses) / jnp.maximum(nb_p, 1)
+            return p, s, tl, loss_fn(p, val_p)
+
+        def live_epoch(carry, epoch):
+            p, s, best_p, best_v, since, live, epochs = carry
+            keys = jax.vmap(jax.random.fold_in, (0, None))(base_keys, epoch)
+            p, s, tl, vl = jax.vmap(lane_epoch)(p, s, keys, live, tr, val,
+                                                n_tr, nb)
+            epochs = epochs + live.astype(jnp.int32)
+            # the epochwise lanes loop's host bookkeeping, as traced values
+            improved = live & (vl < best_v - 1e-6)
+            best_p = jax.tree.map(
+                lambda b, q: jnp.where(
+                    improved.reshape((L,) + (1,) * (q.ndim - 1)), q, b),
+                best_p, p)
+            best_v = jnp.where(improved, vl, best_v)
+            since = jnp.where(improved, 0, since + 1)
+            live = live & (since < patience)
+            return (p, s, best_p, best_v, since, live, epochs), (tl, vl)
+
+        def epoch_step(carry, epoch):
+            # the cond sits OUTSIDE the per-lane vmap: once every lane has
+            # stopped, remaining epochs cost one predicate each
+            dead = lambda c: (c, (jnp.zeros((L,), jnp.float32),
+                                  jnp.zeros((L,), jnp.float32)))
+            return jax.lax.cond(jnp.any(carry[5]),
+                                lambda c: live_epoch(c, epoch), dead, carry)
+
+        init = (params, opt_state, params,
+                jnp.full((L,), jnp.inf, jnp.float32),
+                jnp.zeros((L,), jnp.int32), live0,
+                jnp.zeros((L,), jnp.int32))
+        (_, _, best_p, _, _, _, epochs), (tls, vls) = jax.lax.scan(
+            epoch_step, init, jnp.arange(max_epochs))
+        return best_p, epochs, tls, vls
+
+    return run_fit_k
+
+
+def get_lanes_fit_engine(loss_fn: Callable, *, lr: float = 1e-3):
+    """Jitted vmapped whole-fit lane runner, cached like ``get_engine``."""
+    return _cached_engine("lanes_fit", loss_fn, lr, _build_lanes_fit_engine)
+
+
+# ---------------------------------------------------------------------------
+# single-instance training
+# ---------------------------------------------------------------------------
+
+def _prep_single(data: dict, *, seed: int, val_frac: float, batch_size: int):
+    """Host-side train/val split + device upload shared by the fused and
+    epochwise paths (identical RandomState split either way)."""
     n = len(next(iter(data.values())))
     split = np.random.RandomState(seed).permutation(n)
     n_val = max(int(n * val_frac), 1)
@@ -206,8 +377,50 @@ def train(params, data: dict, loss_fn: Callable, *, batch_size: int = 128,
     tr = {k: v[tr_idx] for k, v in dev.items()}
     n_tr = len(tr_idx)
     bs = max(min(batch_size, n_tr), 1)
-    n_batches = n_tr // bs
+    return tr, val, bs, n_tr // bs
 
+
+def train(params, data: dict, loss_fn: Callable, *, batch_size: int = 128,
+          max_epochs: int = 200, patience: int = 10, lr: float = 1e-3,
+          val_frac: float = 0.1, seed: int = 0,
+          epoch_callback: Optional[Callable] = None) -> TrainResult:
+    """data: dict of equal-length arrays (row-aligned). loss_fn(params, batch).
+
+    Runs the whole fit as one jitted scan-of-scans (module docstring) with
+    a single host sync.  ``epoch_callback`` callers are routed to
+    ``train_epochwise`` — per-epoch host params are exactly the sync the
+    fused engine removes."""
+    if epoch_callback is not None:
+        return train_epochwise(params, data, loss_fn, batch_size=batch_size,
+                               max_epochs=max_epochs, patience=patience,
+                               lr=lr, val_frac=val_frac, seed=seed,
+                               epoch_callback=epoch_callback)
+    tr, val, bs, n_batches = _prep_single(data, seed=seed, val_frac=val_frac,
+                                          batch_size=batch_size)
+    engine = get_fit_engine(loss_fn, lr=lr)
+    best_p, epochs, tls, vls = engine(
+        params, paper_adam(lr).init(params), jax.random.PRNGKey(seed), tr,
+        val, n_batches=n_batches, batch_size=bs, max_epochs=max_epochs,
+        patience=patience)
+    # the single host sync of the fit
+    epochs, tls, vls = jax.device_get((epochs, tls, vls))
+    epochs = int(epochs)
+    return TrainResult(best_p, epochs, epochs * n_batches,
+                       [float(t) for t in tls[:epochs]],
+                       [float(v) for v in vls[:epochs]])
+
+
+def train_epochwise(params, data: dict, loss_fn: Callable, *,
+                    batch_size: int = 128, max_epochs: int = 200,
+                    patience: int = 10, lr: float = 1e-3,
+                    val_frac: float = 0.1, seed: int = 0,
+                    epoch_callback: Optional[Callable] = None) -> TrainResult:
+    """The pre-fusion per-epoch loop: one jitted epoch per dispatch, one
+    host sync per epoch.  Kept as the fused engine's parity oracle and as
+    the ``epoch_callback`` path (callbacks get a defensive copy of the
+    params each epoch — the engine donates its own buffers onward)."""
+    tr, val, bs, n_batches = _prep_single(data, seed=seed, val_frac=val_frac,
+                                          batch_size=batch_size)
     # fresh buffers: the engine donates its params/opt args, so the loop must
     # own them (never the caller's arrays, never the best-so-far snapshot)
     params = jax.tree.map(jnp.array, params)
@@ -242,36 +455,12 @@ def train(params, data: dict, loss_fn: Callable, *, batch_size: int = 128,
 
 
 # ---------------------------------------------------------------------------
-# replica-lane engine: all lanes' epochs as ONE vmapped scan
+# replica-lane training: all lanes' fits as ONE vmapped scan-of-scans
 # ---------------------------------------------------------------------------
 
 # all lanes' epoch keys in one dispatch; module-scoped so the trivial
 # trace compiles once per process, not once per train_lanes call
 _FOLD_KEYS = jax.jit(jax.vmap(jax.random.fold_in, (0, None)))
-
-
-def _pad_to(arr: jax.Array, shape) -> jax.Array:
-    pads = [(0, t - s) for s, t in zip(arr.shape, shape)]
-    return jnp.pad(arr, pads) if any(p for _, p in pads) else arr
-
-
-def _pad_stack(trees):
-    """Zero-pad every leaf per-axis to the max shape across trees and stack
-    along a new leading lane axis, entirely on device (host leaves are
-    uploaded once here; device leaves — an earlier stage's encoder outputs
-    — never round-trip).  All trees must share one structure."""
-    treedef = jax.tree.structure(trees[0])
-    for t in trees[1:]:
-        if jax.tree.structure(t) != treedef:
-            raise ValueError("train_lanes: all lanes must share one "
-                             "param/data tree structure")
-    leaves = [[jnp.asarray(l) for l in jax.tree.leaves(t)] for t in trees]
-    stacked = []
-    for pos in zip(*leaves):
-        target = tuple(max(l.shape[d] for l in pos)
-                       for d in range(pos[0].ndim))
-        stacked.append(jnp.stack([_pad_to(l, target) for l in pos]))
-    return jax.tree.unflatten(treedef, stacked)
 
 
 def _build_many_engine(loss_fn: Callable, lr: float):
@@ -317,25 +506,10 @@ def _build_many_engine(loss_fn: Callable, lr: float):
     return run_epoch_k
 
 
-def train_lanes(specs: Sequence[LaneSpec], loss_fn: Callable, *,
-                batch_size: int = 128, max_epochs: int = 200,
-                patience: int = 10, lr: float = 1e-3,
-                val_frac: float = 0.1) -> List[TrainResult]:
-    """Train L independent lanes as one vmapped scan — one upload, one
-    compile, one host sync per epoch for all lanes (module docstring:
-    padded-stack layout, per-lane early-stop mask).
-
-    Every lane's ``data`` must carry its feature array under the ``"x"``
-    key — the engine sizes rows and the real-feature ``mask`` from it; any
-    other row-aligned keys are padded too but only ``"x"`` is masked.
-    When lane shapes differ (padding present) ``loss_fn`` must consume the
-    ``mask`` (real-feature columns) and ``row_w`` (real-row weights)
-    entries the engine adds to every batch — use
-    ``autoencoder.masked_recon_loss`` for reconstruction workloads; lanes
-    of identical shape (seed replicas) may use any plain loss, the extra
-    keys are inert.  Returns one ``TrainResult`` per lane with padding
-    stripped from the best-val params and histories truncated at that
-    lane's stop epoch."""
+def _prep_lanes(specs: Sequence[LaneSpec], *, batch_size: int,
+                val_frac: float, lr: float):
+    """Per-lane host split + padded-stack upload shared by the fused and
+    epochwise lane paths."""
     K = len(specs)
     assert K >= 1
     for sp in specs:
@@ -358,7 +532,6 @@ def train_lanes(specs: Sequence[LaneSpec], loss_fn: Callable, *,
     n_tr = np.asarray(n_tr_l)
     bs = max(min(batch_size, int(n_tr.min())), 1)
     nb = n_tr // bs                       # per-lane step budget per epoch
-    n_batches = int(nb.max())
 
     for t, v in zip(tr_list, val_list):
         t["mask"] = jnp.ones((t["x"].shape[1],), jnp.float32)
@@ -366,16 +539,147 @@ def train_lanes(specs: Sequence[LaneSpec], loss_fn: Callable, *,
         v["row_w"] = jnp.ones((v["x"].shape[0],), jnp.float32)
 
     # --- padded-stack, built on device (no host round-trip) ---------------
-    tr = _pad_stack(tr_list)
-    val = _pad_stack(val_list)
+    tr = padding.pad_stack(tr_list)
+    val = padding.pad_stack(val_list)
     shapes = [[np.shape(l) for l in jax.tree.leaves(sp.params)]
               for sp in specs]
-    params = _pad_stack([sp.params for sp in specs])
-    best_params = jax.tree.map(jnp.copy, params)
+    params = padding.pad_stack([sp.params for sp in specs])
     opt_state = paper_adam(lr).init(params)
     opt_state = opt_state._replace(step=jnp.zeros((K,), jnp.int32))
-    engine = get_lanes_engine(loss_fn, lr=lr)
     base_keys = jnp.stack([jax.random.PRNGKey(sp.seed) for sp in specs])
+    return params, opt_state, base_keys, tr, val, n_tr, nb, bs, shapes
+
+
+def _shard_lanes(mesh, params, opt_state, base_keys, tr, val, n_tr, nb,
+                 live0, *, shard_rows: bool):
+    """Pad the lane axis to a mesh multiple with dead lanes and
+    ``device_put`` every stacked input with policy-resolved shardings.
+    Returns the inputs device-parallel; the engine itself is unchanged
+    (computation follows data)."""
+    from jax.sharding import NamedSharding
+
+    from repro.sharding import policy
+
+    if "lane" not in mesh.axis_names:
+        raise ValueError(
+            f"train_lanes: mesh axes {tuple(mesh.axis_names)} lack the "
+            "'lane' axis — build the mesh with "
+            "repro.launch.mesh.make_lane_mesh")
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    K = int(base_keys.shape[0])
+    Lp = -(-K // sizes["lane"]) * sizes["lane"]
+
+    def grow(a):
+        # dead lanes: zero params/data, live=False, zero step budget
+        return padding.pad_to(a, (Lp,) + a.shape[1:])
+
+    (params, opt_state, base_keys, tr, val, n_tr, nb, live0) = jax.tree.map(
+        grow, (params, opt_state, base_keys, tr, val, n_tr, nb, live0))
+
+    def put(a, *, rows=False):
+        axes = ("lane",)
+        if rows and a.ndim > 1 and "data" in mesh.axis_names:
+            axes = ("lane", "dp")
+        axes = axes + (None,) * (a.ndim - len(axes))
+        spec = policy._divisible(a.shape,
+                                 policy.resolve(axes, mesh.axis_names), mesh)
+        return jax.device_put(a, NamedSharding(mesh, spec))
+
+    params = jax.tree.map(put, params)
+    opt_state = jax.tree.map(put, opt_state)
+    base_keys, n_tr, nb, live0 = (put(a) for a in (base_keys, n_tr, nb,
+                                                   live0))
+    # "mask" is per-feature, not per-row; everything else shards rows
+    tr = {k: put(v, rows=shard_rows and k != "mask") for k, v in tr.items()}
+    val = {k: put(v, rows=shard_rows and k != "mask") for k, v in val.items()}
+    return params, opt_state, base_keys, tr, val, n_tr, nb, live0
+
+
+def _strip_lane_params(specs, best_params, shapes):
+    """Unstack the best-val params and strip each lane's zero padding."""
+    treedef = jax.tree.structure(specs[0].params)
+    leaves = jax.tree.leaves(best_params)
+    out = []
+    for i in range(len(specs)):
+        pl = [l[i][tuple(slice(0, s) for s in shp)]
+              for l, shp in zip(leaves, shapes[i])]
+        out.append(jax.tree.unflatten(treedef, pl))
+    return out
+
+
+def train_lanes(specs: Sequence[LaneSpec], loss_fn: Callable, *,
+                batch_size: int = 128, max_epochs: int = 200,
+                patience: int = 10, lr: float = 1e-3,
+                val_frac: float = 0.1, mesh=None,
+                shard_rows: bool = False) -> List[TrainResult]:
+    """Train L independent lanes as one vmapped scan-of-scans — one upload,
+    one compile, ONE host sync per fit for all lanes (module docstring:
+    padded-stack layout, per-lane early-stop mask, mesh sharding).
+
+    Every lane's ``data`` must carry its feature array under the ``"x"``
+    key — the engine sizes rows and the real-feature ``mask`` from it; any
+    other row-aligned keys are padded too but only ``"x"`` is masked.
+    When lane shapes differ (padding present) ``loss_fn`` must consume the
+    ``mask`` (real-feature columns) and ``row_w`` (real-row weights)
+    entries the engine adds to every batch — use
+    ``autoencoder.masked_recon_loss`` for reconstruction workloads; lanes
+    of identical shape (seed replicas) may use any plain loss, the extra
+    keys are inert.
+
+    ``mesh`` (from ``repro.launch.mesh.make_lane_mesh``, axes
+    ``("lane", "data")``) shards the lane axis across devices;
+    ``shard_rows=True`` additionally shards each lane's rows across the
+    ``data`` axis (the large-row regime).  Sharded or not, the same jitted
+    engine runs the same computation — parity is exact.
+
+    Returns one ``TrainResult`` per lane with padding stripped from the
+    best-val params and histories truncated at that lane's stop epoch."""
+    K = len(specs)
+    (params, opt_state, base_keys, tr, val, n_tr, nb, bs,
+     shapes) = _prep_lanes(specs, batch_size=batch_size, val_frac=val_frac,
+                           lr=lr)
+    n_batches = int(nb.max())
+    nb_dev = jnp.asarray(nb, jnp.int32)
+    n_tr_dev = jnp.asarray(n_tr, jnp.int32)
+    live0 = jnp.ones((K,), bool)
+    if mesh is not None:
+        (params, opt_state, base_keys, tr, val, n_tr_dev, nb_dev,
+         live0) = _shard_lanes(mesh, params, opt_state, base_keys, tr, val,
+                               n_tr_dev, nb_dev, live0,
+                               shard_rows=shard_rows)
+
+    engine = get_lanes_fit_engine(loss_fn, lr=lr)
+    best_params, epochs, tls, vls = engine(
+        params, opt_state, base_keys, tr, val, n_tr_dev, nb_dev, live0,
+        n_batches=n_batches, batch_size=bs, max_epochs=max_epochs,
+        patience=patience)
+    # the single host sync of the fit (dead padding lanes sliced away)
+    epochs, tls, vls = jax.device_get((epochs, tls, vls))
+
+    stripped = _strip_lane_params(specs, best_params, shapes)
+    results = []
+    for i in range(K):
+        e = int(epochs[i])
+        results.append(TrainResult(stripped[i], e, e * int(nb[i]),
+                                   [float(t) for t in tls[:e, i]],
+                                   [float(v) for v in vls[:e, i]]))
+    return results
+
+
+def train_lanes_epochwise(specs: Sequence[LaneSpec], loss_fn: Callable, *,
+                          batch_size: int = 128, max_epochs: int = 200,
+                          patience: int = 10, lr: float = 1e-3,
+                          val_frac: float = 0.1) -> List[TrainResult]:
+    """The pre-fusion lane loop: one vmapped epoch per dispatch, one host
+    sync per epoch for the early-stop bookkeeping.  Kept as the fused lane
+    engine's live parity oracle (``tests/test_training_engine.py``)."""
+    K = len(specs)
+    (params, opt_state, base_keys, tr, val, n_tr, nb, bs,
+     shapes) = _prep_lanes(specs, batch_size=batch_size, val_frac=val_frac,
+                           lr=lr)
+    n_batches = int(nb.max())
+    best_params = jax.tree.map(jnp.copy, params)
+    engine = get_lanes_engine(loss_fn, lr=lr)
     nb_dev = jnp.asarray(nb, jnp.int32)
     n_tr_dev = jnp.asarray(n_tr, jnp.int32)
 
@@ -411,17 +715,10 @@ def train_lanes(specs: Sequence[LaneSpec], loss_fn: Callable, *,
         if not live.any():
             break
 
-    treedef = jax.tree.structure(specs[0].params)
-    leaves = jax.tree.leaves(best_params)
-    results = []
-    for i in range(K):
-        pl = [l[i][tuple(slice(0, s) for s in shp)]
-              for l, shp in zip(leaves, shapes[i])]
-        results.append(TrainResult(jax.tree.unflatten(treedef, pl),
-                                   int(epochs_run[i]),
-                                   int(epochs_run[i] * nb[i]),
-                                   tl_hist[i], vl_hist[i]))
-    return results
+    stripped = _strip_lane_params(specs, best_params, shapes)
+    return [TrainResult(stripped[i], int(epochs_run[i]),
+                        int(epochs_run[i] * nb[i]), tl_hist[i], vl_hist[i])
+            for i in range(K)]
 
 
 train_many = train_lanes     # the K-party special case, by its PR-2 name

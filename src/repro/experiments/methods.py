@@ -38,16 +38,18 @@ def _apcvfl(scenario, spec: MethodSpec, *, seed: int = 0) -> RunResult:
 
 
 @register_replicas("apcvfl")
-def _apcvfl_replicated(scenarios, spec: MethodSpec, *, seeds):
+def _apcvfl_replicated(scenarios, spec: MethodSpec, *, seeds, mesh=None):
     """Seed groups run through the replica-lane runners — every protocol
     stage is S stacked lanes of one vmapped scan: 2-party cells via
     ``run_apcvfl_replicated``, K-party cells via
-    ``run_apcvfl_k_replicated`` (S*K g1 lanes per dispatch)."""
+    ``run_apcvfl_k_replicated`` (S*K g1 lanes per dispatch).  ``mesh``
+    (from a spec's ``devices`` field) shards every stage's lane axis
+    across devices."""
     if isinstance(scenarios[0], VFLScenarioK):
         return multiparty.run_apcvfl_k_replicated(scenarios, seeds=seeds,
-                                                  **spec.params)
+                                                  mesh=mesh, **spec.params)
     return pipeline.run_apcvfl_replicated(scenarios, seeds=seeds,
-                                          **spec.params)
+                                          mesh=mesh, **spec.params)
 
 
 @register_method("serve_smoke", supports_multiparty=True,
@@ -126,9 +128,11 @@ def _apcvfl_aligned_only(scenario, spec: MethodSpec, *,
 
 
 @register_replicas("apcvfl_aligned_only")
-def _apcvfl_aligned_only_replicated(scenarios, spec: MethodSpec, *, seeds):
+def _apcvfl_aligned_only_replicated(scenarios, spec: MethodSpec, *, seeds,
+                                    mesh=None):
     return pipeline.run_apcvfl_aligned_only_replicated(scenarios,
                                                        seeds=seeds,
+                                                       mesh=mesh,
                                                        **spec.params)
 
 

@@ -86,7 +86,16 @@ class ExperimentSpec:
     (one vmapped dispatch for all seeds); methods without one, and
     ``replicate=False`` specs, run the sequential per-seed path.  Either
     way results arrive in the same order with the same values up to
-    replica-parity tolerance."""
+    replica-parity tolerance.
+
+    ``devices`` requests mesh-sharded replicated dispatch: a dict of mesh
+    axis sizes, e.g. ``{"lane": 4}`` or ``{"lane": 2, "data": 2}``
+    (``lane`` shards the replica-lane axis across devices, ``data``
+    reserves devices for row sharding).  ``sweep()`` builds the mesh via
+    ``repro.launch.mesh.make_lane_mesh`` — raising early when the host
+    has too few devices — and threads it through each method's replicated
+    runner; sequential (non-replicated) dispatch ignores it.  Empty (the
+    default) keeps every dispatch single-device."""
     name: str
     dataset: str = "bcw"
     methods: Tuple[MethodSpec, ...] = ()
@@ -96,6 +105,7 @@ class ExperimentSpec:
     seeds: Tuple[int, ...] = (0,)
     overrides: Dict = field(default_factory=dict)
     replicate: bool = True
+    devices: Dict = field(default_factory=dict)
 
     def scenarios(self) -> Iterator[ScenarioSpec]:
         """Expand the aligned x K x seed grid (methods loop inside each

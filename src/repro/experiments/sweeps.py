@@ -60,6 +60,15 @@ def _validate(spec: ExperimentSpec) -> None:
     if any(k < 2 for k in spec.n_parties):
         raise ValueError(f"n_parties must all be >= 2, got "
                          f"{list(spec.n_parties)}")
+    unknown_axes = set(spec.devices) - {"lane", "data"}
+    if unknown_axes:
+        raise ValueError(f"devices: unknown mesh axes "
+                         f"{sorted(unknown_axes)}; valid axes are "
+                         f"['data', 'lane']")
+    for ax, n in spec.devices.items():
+        if not (isinstance(n, int) and n >= 1):
+            raise ValueError(f"devices[{ax!r}] must be a positive int, "
+                             f"got {n!r}")
     max_k = max(spec.n_parties, default=2)
     seen_labels = set()
     for m in spec.methods:
@@ -108,8 +117,17 @@ def sweep(spec: ExperimentSpec, *,
     self-describing without the spec in hand.  Seed groups dispatch
     through replica-lane runners where available (module docstring);
     results keep the historical order (cell-major, methods inside each
-    cell) regardless of how they were computed."""
+    cell) regardless of how they were computed.
+
+    ``spec.devices`` builds a lane mesh up front (one mesh for the whole
+    sweep — ``launch.mesh.make_lane_mesh`` raises early on a device
+    shortfall) and threads it into every replicated dispatch as
+    ``mesh=``; sequential dispatches ignore it."""
     _validate(spec)
+    mesh = None
+    if spec.devices:
+        from repro.launch.mesh import make_lane_mesh
+        mesh = make_lane_mesh(**spec.devices)
     ds_cache: dict = {}
     results: List[RunResult] = []
     for group in _seed_groups(spec):
@@ -127,7 +145,12 @@ def sweep(spec: ExperimentSpec, *,
             mspec = replace(m, params={**spec.overrides, **m.params})
             if (spec.replicate and entry.supports_replicas
                     and len(group) > 1):
-                rs = entry.replicated_fn(scenarios, mspec, seeds=seeds)
+                # mesh only when requested: registered runners that
+                # predate sharding keep their (scenarios, spec, seeds)
+                # signature working untouched
+                extra = {} if mesh is None else {"mesh": mesh}
+                rs = entry.replicated_fn(scenarios, mspec, seeds=seeds,
+                                         **extra)
                 if len(rs) != len(group):
                     raise RuntimeError(
                         f"replicated runner for {m.method!r} returned "

@@ -13,6 +13,9 @@ Logical axes (resolved per mesh):
   ``tp``    tensor parallel dim            -> ("model",)
   ``ep``    expert parallel dim            -> ("pod","model") or ("model",)
   ``vocab`` vocabulary dim                 -> ("model",)
+  ``lane``  replica-lane dim (the VFL lane -> ("lane",)
+            engine's stacked leading axis,
+            meshes from make_lane_mesh)
   ``None``  replicated
 """
 from __future__ import annotations
@@ -58,6 +61,7 @@ def _rules(mesh_axes: tuple) -> dict:
         "tp": ("model",),
         "ep": ("pod", "model") if multi_pod else ("model",),
         "vocab": ("model",),
+        "lane": ("lane",),
         None: None,
     }
 

@@ -17,15 +17,30 @@ def pytest_addoption(parser):
 def pytest_configure(config):
     config.addinivalue_line(
         "markers", "slow: multi-minute end-to-end path; needs --runslow")
+    config.addinivalue_line(
+        "markers", "needs_devices(n): requires >= n jax devices; "
+        "auto-skipped otherwise (fake host devices with "
+        "XLA_FLAGS=--xla_force_host_platform_device_count=N)")
 
 
 def pytest_collection_modifyitems(config, items):
-    if config.getoption("--runslow"):
-        return
-    skip = pytest.mark.skip(reason="slow path: pass --runslow to run")
+    runslow = config.getoption("--runslow")
+    n_dev = None                      # import jax only if a test needs it
     for item in items:
-        if "slow" in item.keywords:
-            item.add_marker(skip)
+        if "slow" in item.keywords and not runslow:
+            item.add_marker(pytest.mark.skip(
+                reason="slow path: pass --runslow to run"))
+        marker = item.get_closest_marker("needs_devices")
+        if marker is not None:
+            if n_dev is None:
+                import jax
+                n_dev = jax.device_count()
+            need = marker.args[0] if marker.args else 2
+            if n_dev < need:
+                item.add_marker(pytest.mark.skip(
+                    reason=f"needs {need} jax devices, have {n_dev}; "
+                    f"set XLA_FLAGS=--xla_force_host_platform_device_"
+                    f"count={need} before jax initializes"))
 
 
 @pytest.fixture(scope="session")

@@ -1,0 +1,85 @@
+"""Unit tests for the shared zero-padding utilities (``core.padding``):
+pad_to growth/no-op/shrink, pad_stack shape and structure rules, the
+zero-weight-row index padding, and the k-fold probe built on top of it."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import classifier as clf
+from repro.core import padding
+
+
+def test_pad_to_grows_with_zeros():
+    a = jnp.arange(6, dtype=jnp.float32).reshape(2, 3)
+    out = padding.pad_to(a, (4, 5))
+    assert out.shape == (4, 5)
+    np.testing.assert_array_equal(np.asarray(out[:2, :3]), np.asarray(a))
+    assert float(jnp.abs(out[2:]).sum()) == 0.0
+    assert float(jnp.abs(out[:, 3:]).sum()) == 0.0
+
+
+def test_pad_to_noop_returns_same_array():
+    a = jnp.ones((3, 4))
+    assert padding.pad_to(a, (3, 4)) is a
+
+
+def test_pad_to_refuses_to_shrink():
+    with pytest.raises(ValueError, match="cannot shrink"):
+        padding.pad_to(jnp.ones((4, 4)), (2, 4))
+
+
+def test_pad_stack_pads_each_leaf_to_max_shape():
+    trees = [{"w": jnp.ones((2, 3)), "b": jnp.ones((3,))},
+             {"w": jnp.full((4, 2), 2.0), "b": jnp.full((5,), 2.0)}]
+    out = padding.pad_stack(trees)
+    assert out["w"].shape == (2, 4, 3)
+    assert out["b"].shape == (2, 5)
+    # lane 0's real sub-block survives; its padding is zero
+    np.testing.assert_array_equal(np.asarray(out["w"][0, :2, :3]),
+                                  np.ones((2, 3)))
+    assert float(jnp.abs(out["w"][0, 2:, :]).sum()) == 0.0
+    assert float(jnp.abs(out["b"][0, 3:]).sum()) == 0.0
+    # results live on device as jax arrays
+    assert isinstance(out["w"], jax.Array)
+
+
+def test_pad_stack_rejects_mismatched_structures():
+    with pytest.raises(ValueError, match="share one"):
+        padding.pad_stack([{"w": jnp.ones(2)},
+                           {"w": jnp.ones(2), "b": jnp.ones(1)}])
+
+
+def test_pad_index_rows_zero_weight_slots():
+    idx, w = padding.pad_index_rows(
+        [np.array([5, 3]), np.array([7, 1, 2])])
+    assert idx.shape == (2, 3) and w.shape == (2, 3)
+    assert idx.dtype == np.int32 and w.dtype == np.float32
+    np.testing.assert_array_equal(idx[0], [5, 3, 0])
+    np.testing.assert_array_equal(w[0], [1.0, 1.0, 0.0])
+    np.testing.assert_array_equal(idx[1], [7, 1, 2])
+    np.testing.assert_array_equal(w[1], [1.0, 1.0, 1.0])
+
+
+def test_pad_index_rows_min_len():
+    idx, w = padding.pad_index_rows([np.array([4])], min_len=4)
+    assert idx.shape == (1, 4)
+    np.testing.assert_array_equal(w[0], [1.0, 0.0, 0.0, 0.0])
+
+
+def test_fold_arrays_partition_and_weights():
+    """classifier._fold_arrays (now built on pad_index_rows) still yields a
+    disjoint exhaustive k-fold partition with inert padded slots."""
+    n, k, seed = 23, 4, 7
+    tr_idx, tr_w, te_idx, folds, te_lens = clf._fold_arrays(n, k, seed)
+    assert tr_idx.shape == tr_w.shape
+    assert sum(te_lens) == n
+    all_te = np.concatenate(folds)
+    assert sorted(all_te.tolist()) == list(range(n))
+    for i in range(k):
+        tr_real = tr_idx[i][tr_w[i] > 0]
+        te_real = folds[i]
+        assert len(tr_real) + len(te_real) == n
+        assert not set(tr_real.tolist()) & set(te_real.tolist())
+        # padded train slots are weight-0 pointers at row 0
+        assert np.all(tr_idx[i][tr_w[i] == 0] == 0)

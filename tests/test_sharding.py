@@ -24,9 +24,50 @@ def test_resolve_multi_pod_dp_and_ep():
         P(("pod", "model"), "data", None)
 
 
+def test_resolve_lane_axis():
+    """The VFL lane engine's logical axis: leading lane dim sharded, the
+    per-lane payload dims replicated."""
+    assert policy.resolve(("lane", None, None), ("lane", "data")) == \
+        P("lane", None, None)
+    assert policy.resolve(("lane", "dp"), ("lane", "data")) == \
+        P("lane", "data")
+
+
 def test_batch_pspec():
     assert policy.batch_pspec(("data", "model")) == "data"
     assert policy.batch_pspec(("pod", "data", "model")) == ("pod", "data")
+    assert policy.batch_pspec(("lane", "data")) == "data"
+
+
+class _FakeMesh:
+    """Stand-in with more devices than the host has — _divisible only
+    reads axis_names and devices.shape."""
+    def __init__(self, shape, axes):
+        self.axis_names = axes
+        self.devices = np.empty(shape)
+
+
+def test_divisible_drops_odd_dims():
+    mesh = _FakeMesh((4, 2), ("lane", "data"))
+    spec = P("lane", "data")
+    # 8 lanes / 4 divides, 10 rows / 2 divides -> spec survives
+    assert policy._divisible((8, 10), spec, mesh) == P("lane", "data")
+    # 6 lanes / 4 doesn't divide -> lane dropped; rows keep theirs
+    assert policy._divisible((6, 10), spec, mesh) == P(None, "data")
+    # odd rows -> data dropped independently
+    assert policy._divisible((8, 7), spec, mesh) == P("lane", None)
+
+
+def test_divisible_one_device_mesh_keeps_spec():
+    mesh = _FakeMesh((1, 1), ("lane", "data"))
+    assert policy._divisible((3, 7), P("lane", "data"), mesh) == \
+        P("lane", "data")
+
+
+def test_divisible_short_spec_pads_with_none():
+    mesh = _FakeMesh((4,), ("lane",))
+    assert policy._divisible((8, 5, 3), P("lane"), mesh) == \
+        P("lane", None, None)
 
 
 def test_divisible_fallback_on_tiny_mesh():

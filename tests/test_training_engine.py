@@ -147,6 +147,10 @@ def test_make_loss_closures_share_compiled_engine():
     assert l1 is not l2
     assert training.get_engine(l1) is training.get_engine(l2)
     assert training.get_engine(l1) is not training.get_engine(l3)
+    assert training.get_fit_engine(l1) is training.get_fit_engine(l2)
+    assert training.get_fit_engine(l1) is not training.get_fit_engine(l3)
+    # epochwise and fused engines live under distinct cache tags
+    assert training.get_fit_engine(l1) is not training.get_engine(l1)
 
 
 def test_no_recompilation_across_make_loss_instances():
@@ -159,7 +163,7 @@ def test_no_recompilation_across_make_loss_instances():
     params = ae.init_autoencoder(jax.random.PRNGKey(0), [d, 8, m])
     kw = dict(batch_size=32, max_epochs=2, patience=99, seed=0)
 
-    engine = training.get_engine(distill.make_loss(lam=0.11))
+    engine = training.get_fit_engine(distill.make_loss(lam=0.11))
     if not hasattr(engine, "_cache_size"):   # private jax API; guard it
         pytest.skip("this jax version has no PjitFunction._cache_size")
     training.train(params, data, distill.make_loss(lam=0.11), **kw)
@@ -167,6 +171,101 @@ def test_no_recompilation_across_make_loss_instances():
     assert misses >= 1
     training.train(params, data, distill.make_loss(lam=0.11), **kw)
     assert engine._cache_size() == misses   # no fresh compilation
+
+
+# ---------------------------------------------------------------------------
+# fused scan-of-scans engine vs the epochwise parity oracle
+# ---------------------------------------------------------------------------
+
+def test_fused_matches_epochwise_on_trace_workloads():
+    """The fused whole-fit engine must reproduce the per-epoch-loop engine
+    EXACTLY on the stored-trace workloads: same early-stop epoch count,
+    same step count, float-identical histories and best-val params (both
+    paths run the identical per-epoch computation; only the early-stop
+    bookkeeping moved on device)."""
+    for name, (params, data, kw) in _trace_runs().items():
+        fused = training.train(params, data, ae.recon_loss, **kw)
+        loop = training.train_epochwise(params, data, ae.recon_loss, **kw)
+        assert fused.epochs_run == loop.epochs_run, name
+        assert fused.steps_run == loop.steps_run, name
+        np.testing.assert_allclose(fused.train_loss, loop.train_loss,
+                                   rtol=1e-6, err_msg=name)
+        np.testing.assert_allclose(fused.val_loss, loop.val_loss,
+                                   rtol=1e-6, err_msg=name)
+        assert _max_leaf_diff(fused.params, loop.params) < 1e-6, name
+
+
+def test_fused_matches_epochwise_early_stop():
+    """Early-stop epoch counts agree on a genuinely-stopping workload."""
+    params, data = _toy(n=64, d=4)
+    kw = dict(batch_size=16, max_epochs=50, patience=3, lr=0.0, seed=0)
+    fused = training.train(params, data, ae.recon_loss, **kw)
+    loop = training.train_epochwise(params, data, ae.recon_loss, **kw)
+    assert fused.epochs_run == loop.epochs_run == 1 + 3
+    assert _max_leaf_diff(fused.params, loop.params) == 0.0
+
+
+def test_fused_lanes_match_epochwise_lanes():
+    """train_lanes (fused) vs train_lanes_epochwise on uneven lanes:
+    exact epoch counts, float-identical params and histories per lane."""
+    specs = []
+    for i, (n, d) in enumerate([(120, 6), (90, 4), (150, 5)]):
+        x = np.random.RandomState(10 + i).randn(n, d).astype(np.float32)
+        p = ae.init_autoencoder(jax.random.PRNGKey(20 + i), [d, 8, 4])
+        specs.append(training.LaneSpec(p, {"x": x}, seed=i))
+    kw = dict(batch_size=16, max_epochs=25, patience=4)
+    fused = training.train_lanes(specs, ae.masked_recon_loss, **kw)
+    loop = training.train_lanes_epochwise(specs, ae.masked_recon_loss, **kw)
+    for i, (f, l) in enumerate(zip(fused, loop)):
+        assert f.epochs_run == l.epochs_run, i
+        assert f.steps_run == l.steps_run, i
+        np.testing.assert_allclose(f.train_loss, l.train_loss, rtol=1e-6)
+        np.testing.assert_allclose(f.val_loss, l.val_loss, rtol=1e-6)
+        assert _max_leaf_diff(f.params, l.params) < 1e-6, i
+
+
+def test_fused_fit_is_single_dispatch(monkeypatch):
+    """<=1 host sync per fit: the whole fit goes through exactly one call
+    of the fused engine (the epoch loop lives inside the jitted scan)."""
+    params, data = _toy(n=120, d=5)
+    calls = []
+    real = training.get_fit_engine
+
+    def spy(loss_fn, *, lr=1e-3):
+        engine = real(loss_fn, lr=lr)
+
+        def wrapped(*a, **k):
+            calls.append(k.get("max_epochs"))
+            return engine(*a, **k)
+        return wrapped
+
+    monkeypatch.setattr(training, "get_fit_engine", spy)
+    r = training.train(params, data, ae.recon_loss, batch_size=32,
+                       max_epochs=9, patience=99, seed=0)
+    assert r.epochs_run == 9
+    assert calls == [9]
+
+
+def test_fused_lanes_fit_is_single_dispatch(monkeypatch):
+    params, data = _toy(n=120, d=5)
+    calls = []
+    real = training.get_lanes_fit_engine
+
+    def spy(loss_fn, *, lr=1e-3):
+        engine = real(loss_fn, lr=lr)
+
+        def wrapped(*a, **k):
+            calls.append(k.get("max_epochs"))
+            return engine(*a, **k)
+        return wrapped
+
+    monkeypatch.setattr(training, "get_lanes_fit_engine", spy)
+    rs = training.train_lanes(
+        [training.LaneSpec(params, data, 0),
+         training.LaneSpec(params, data, 1)],
+        ae.masked_recon_loss, batch_size=32, max_epochs=7, patience=99)
+    assert [r.epochs_run for r in rs] == [7, 7]
+    assert calls == [7]
 
 
 # ---------------------------------------------------------------------------
