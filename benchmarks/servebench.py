@@ -57,9 +57,14 @@ def run(*, requests: int = 10_000, max_rows: int = 100, epochs: int = 15,
                                     p_known=p_known)
 
     # --- bucketed batched engine (warm: compiles happen per bucket) -------
+    from repro.analysis import guards
     engine = sv.VFLServingEngine(bundle)
-    engine.warmup()
-    bucketed = sv.serve_stream(engine, stream)
+    with guards.compile_counter() as warm_tally:
+        engine.warmup()
+    with guards.compile_counter() as stream_tally:
+        bucketed = sv.serve_stream(engine, stream)
+    bucketed["xla_compiles_warmup"] = warm_tally.count
+    bucketed["xla_compiles_stream"] = stream_tally.count
     print(f"servebench/bucketed/r{requests},"
           f"{1e6 * bucketed['wall_s'] / max(bucketed['rows'], 1):.1f},"
           f"rows_per_s={bucketed['rows_per_s']:.0f}|"
@@ -99,11 +104,15 @@ def run(*, requests: int = 10_000, max_rows: int = 100, epochs: int = 15,
         "throughput_speedup_vs_naive": round(speedup, 2),
         "min_speedup": MIN_SPEEDUP,
         "speedup_ok": speedup >= MIN_SPEEDUP,
+        "xla_compiles_stream": bucketed["xla_compiles_stream"],
+        "stream_compiles_ok": bucketed["xla_compiles_stream"] == 0,
     }
     print(f"# acceptance: {shapes} batch shapes "
           f"(<= {MAX_BATCH_SHAPES}: {acceptance['shapes_ok']}), "
           f"{speedup:.1f}x naive throughput "
-          f"(>= {MIN_SPEEDUP}x: {acceptance['speedup_ok']})", flush=True)
+          f"(>= {MIN_SPEEDUP}x: {acceptance['speedup_ok']}), "
+          f"{bucketed['xla_compiles_stream']} warmed-stream compiles "
+          f"(== 0: {acceptance['stream_compiles_ok']})", flush=True)
 
     payload = {
         "name": f"servebench/bcw/r{requests}/mr{max_rows}",

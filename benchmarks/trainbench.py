@@ -199,6 +199,7 @@ def run_sweep(epochs: int = 30, seeds: int = 5, out_json="BENCH_sweep.json",
     CPU."""
     from dataclasses import replace
 
+    from repro.analysis import guards
     from repro.experiments import (ExperimentSpec, MethodSpec,
                                    build_scenario, get_method, sweep)
     from repro.launch.experiment import smoke_spec
@@ -218,10 +219,12 @@ def run_sweep(epochs: int = 30, seeds: int = 5, out_json="BENCH_sweep.json",
         for s in (seq_spec, spec):        # warm both compile caches
             sweep(s)
         t0 = time.time()
-        seq_res = sweep(seq_spec)
+        with guards.compile_counter() as seq_tally:
+            seq_res = sweep(seq_spec)
         t_seq = time.time() - t0
         t0 = time.time()
-        rep_res = sweep(spec)
+        with guards.compile_counter() as rep_tally:
+            rep_res = sweep(spec)
         t_rep = time.time() - t0
 
         cell = build_scenario(next(iter(spec.scenarios())))
@@ -239,6 +242,9 @@ def run_sweep(epochs: int = 30, seeds: int = 5, out_json="BENCH_sweep.json",
             "sequential_steps_per_s": round(steps / t_seq, 1),
             "replicated_steps_per_s": round(steps / t_rep, 1),
             "lane_occupancy": _lane_occupancy(rep_res),
+            # warmed runs: compile stability proof (0 = jit caches held)
+            "xla_compiles_warm_sequential": seq_tally.count,
+            "xla_compiles_warm_replicated": rep_tally.count,
         }
         replicas[m.method] = bench
         if csv:

@@ -1,0 +1,31 @@
+"""jaxlint: static analysis + runtime guards for the engine's
+compile/sync/dtype contracts.
+
+Two layers (see ``analysis/README.md`` for the rules reference):
+
+* :mod:`repro.analysis.lint` — an AST lint pass over the package with
+  JAX/Pallas-specific rules (R001-R007: host calls in traced code, traced
+  branching, jit static-arg hygiene, donated-buffer reuse, PRNG key reuse,
+  Pallas grid arithmetic, dtype hygiene), gated by a committed baseline
+  (``analysis/baseline.json``).  Pure stdlib ``ast`` — running the linter
+  never initializes a JAX backend.
+
+* :mod:`repro.analysis.guards` — runtime context managers proving the
+  contracts the linter can only approximate: ``compile_counter`` (actual
+  XLA compilations per entry point), ``no_host_sync`` (device->host
+  transfers per fit / per predict), ``audit_dtypes`` (engine pytrees stay
+  in the float32/int32 family), against budgets committed in
+  ``ANALYSIS_budgets.json``.
+
+CLI: ``python -m repro.launch.lint`` (``--json``, ``--diff``,
+``--baseline-update``).
+"""
+from __future__ import annotations
+
+# lint is import-light (stdlib only); guards imports jax and is pulled in
+# lazily so `python -m repro.launch.lint` stays backend-free.
+from repro.analysis.lint import (Finding, lint_paths, lint_source,
+                                 load_baseline, write_baseline)
+
+__all__ = ["Finding", "lint_paths", "lint_source", "load_baseline",
+           "write_baseline"]

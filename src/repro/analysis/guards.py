@@ -1,0 +1,262 @@
+"""jaxlint runtime layer: prove the contracts the static rules can only
+approximate, against budgets committed in ``ANALYSIS_budgets.json``.
+
+``compile_counter``
+    Counts *actual* XLA compilations via ``jax.monitoring``'s
+    ``/jax/core/compile/backend_compile_duration`` event — one event per
+    backend compile, zero on cache hits.  This is the ground truth the
+    warmed-path budgets (train fit: 0, serve bucket steady state: 0) are
+    asserted against.
+
+``no_host_sync``
+    Proves the one-device->host-transfer-per-fit contract.
+    ``jax.transfer_guard`` alone is NOT sufficient: on the CPU backend
+    device->host transfers are zero-copy and the guard never fires (it is
+    still applied here as a second layer for real accelerator backends).
+    So the guard intercepts at the Python boundary instead: implicit
+    conversions (``np.asarray``/``float()``/``bool()``/``.item()``/
+    ``.tolist()`` on a ``jax.Array``) raise ``HostSyncError`` at the call
+    site; explicit ``jax.device_get`` — the engine's one sanctioned sync
+    idiom — is counted and checked against ``allowed`` on exit.
+
+``audit_dtypes``
+    Asserts every leaf of an engine pytree stays in the float32/int32
+    family — the dtype contract R007 pins statically at creation sites.
+
+Not thread-safe and not reentrant (the interpositions are process-global
+state); guards are test/bench instrumentation, not production wrappers.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+from contextlib import contextmanager
+from typing import Iterable, Optional
+
+import jax
+
+COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
+
+_lock = threading.Lock()
+_compile_events = 0
+_listener_registered = False
+
+
+class GuardError(AssertionError):
+    """Base class: a runtime contract was violated."""
+
+
+class CompileBudgetError(GuardError):
+    pass
+
+
+class HostSyncError(GuardError):
+    pass
+
+
+class DtypeAuditError(GuardError):
+    pass
+
+
+# ---------------------------------------------------------------------------
+# compile counting
+# ---------------------------------------------------------------------------
+
+def _ensure_listener() -> None:
+    # jax.monitoring has no per-listener unregistration, so exactly one
+    # process-global listener is registered on first use and kept forever;
+    # counters snapshot the global count instead of subscribing/unsubscribing.
+    global _listener_registered
+    with _lock:
+        if _listener_registered:
+            return
+
+        def _on_event_duration(event, duration, **kwargs):
+            global _compile_events
+            if event == COMPILE_EVENT:
+                _compile_events += 1
+
+        jax.monitoring.register_event_duration_secs_listener(
+            _on_event_duration)
+        _listener_registered = True
+
+
+class CompileTally:
+    def __init__(self, start: int):
+        self._start = start
+
+    @property
+    def count(self) -> int:
+        return _compile_events - self._start
+
+
+@contextmanager
+def compile_counter(budget: Optional[int] = None, *, label: str = ""):
+    """Count XLA backend compilations inside the block.  With ``budget``,
+    raise :class:`CompileBudgetError` on exit if the count exceeds it."""
+    _ensure_listener()
+    tally = CompileTally(_compile_events)
+    yield tally
+    if budget is not None and tally.count > budget:
+        raise CompileBudgetError(
+            f"{label or 'block'}: {tally.count} XLA compilations, "
+            f"budget is {budget} — a shape/dtype/static-arg change is "
+            f"defeating the jit cache")
+
+
+# ---------------------------------------------------------------------------
+# host-sync accounting
+# ---------------------------------------------------------------------------
+
+class SyncTally:
+    def __init__(self):
+        self.device_gets = 0
+
+
+# conversion dunders that force a device->host materialization.  These
+# patch cleanly on the pybind11 ArrayImpl (heap type: setattr updates the
+# C slots).  NOTE ``np.asarray(jax_array)`` does NOT route through
+# ``__array__`` — numpy takes the C buffer protocol — so the numpy
+# module-level entry points are patched as well; that pair is exactly the
+# stray-conversion idiom this repo's host code uses.
+_SYNC_ATTRS = ("__array__", "__float__", "__int__", "__bool__",
+               "__index__", "__complex__", "item", "tolist")
+_NUMPY_FUNCS = ("asarray", "array", "ascontiguousarray", "asanyarray")
+
+
+@contextmanager
+def no_host_sync(allowed: int = 0, *, label: str = ""):
+    """Forbid device->host transfers inside the block except ``allowed``
+    explicit ``jax.device_get`` calls.
+
+    Implicit conversions raise :class:`HostSyncError` at the offending
+    call site (best possible traceback); explicit ``jax.device_get`` is
+    counted and the total is checked on exit.
+    """
+    from jax._src import array as _array_mod
+
+    array_cls = _array_mod.ArrayImpl
+    tally = SyncTally()
+    in_device_get = threading.local()
+
+    def _blocked(name):
+        orig = getattr(array_cls, name, None)
+
+        def wrapper(self, *a, **k):
+            if getattr(in_device_get, "flag", False):
+                return orig(self, *a, **k)
+            raise HostSyncError(
+                f"{label or 'block'}: implicit device->host sync via "
+                f"jax.Array.{name} — route host reads through one "
+                f"accounted jax.device_get")
+
+        return orig, wrapper
+
+    orig_device_get = jax.device_get
+
+    def counting_device_get(x):
+        tally.device_gets += 1
+        in_device_get.flag = True
+        try:
+            return orig_device_get(x)
+        finally:
+            in_device_get.flag = False
+
+    import numpy as np
+
+    def _np_guard(fname, orig_fn):
+        def wrapper(a, *args, **kwargs):
+            if isinstance(a, array_cls) and \
+                    not getattr(in_device_get, "flag", False):
+                raise HostSyncError(
+                    f"{label or 'block'}: implicit device->host sync via "
+                    f"np.{fname}(jax.Array) — route host reads through "
+                    f"one accounted jax.device_get")
+            return orig_fn(a, *args, **kwargs)
+        return wrapper
+
+    patched = {}
+    for name in _SYNC_ATTRS:
+        if hasattr(array_cls, name):
+            orig, wrapper = _blocked(name)
+            try:
+                setattr(array_cls, name, wrapper)
+            except (AttributeError, TypeError):
+                continue
+            patched[name] = orig
+    np_patched = {}
+    for fname in _NUMPY_FUNCS:
+        orig_fn = getattr(np, fname, None)
+        if orig_fn is not None:
+            np_patched[fname] = orig_fn
+            setattr(np, fname, _np_guard(fname, orig_fn))
+    jax.device_get = counting_device_get
+    try:
+        # no-op on CPU (zero-copy d2h), real teeth on accelerators
+        with jax.transfer_guard_device_to_host("disallow"):
+            yield tally
+    finally:
+        jax.device_get = orig_device_get
+        for name, orig in patched.items():
+            setattr(array_cls, name, orig)
+        for fname, orig_fn in np_patched.items():
+            setattr(np, fname, orig_fn)
+    if tally.device_gets > allowed:
+        raise HostSyncError(
+            f"{label or 'block'}: {tally.device_gets} jax.device_get "
+            f"syncs, budget is {allowed} — the engine contract is one "
+            f"accounted sync per fit")
+
+
+# ---------------------------------------------------------------------------
+# dtype audit
+# ---------------------------------------------------------------------------
+
+ENGINE_DTYPES = frozenset({"float32", "int32", "uint32", "bool"})
+
+
+def audit_dtypes(tree, allowed: Iterable[str] = ENGINE_DTYPES, *,
+                 label: str = "") -> None:
+    """Raise :class:`DtypeAuditError` if any leaf of ``tree`` has a dtype
+    outside ``allowed`` (default: the engine's float32/int32 family)."""
+    allowed = frozenset(allowed)
+    bad = []
+    leaves = jax.tree_util.tree_leaves_with_path(tree)
+    for path, leaf in leaves:
+        dtype = getattr(leaf, "dtype", None)
+        if dtype is None:        # python scalar leaf: a weak-type seed
+            bad.append((jax.tree_util.keystr(path),
+                        type(leaf).__name__ + " (python scalar)"))
+        elif dtype.name not in allowed:
+            bad.append((jax.tree_util.keystr(path), dtype.name))
+    if bad:
+        listing = ", ".join(f"{p or '<root>'}: {d}" for p, d in bad[:8])
+        raise DtypeAuditError(
+            f"{label or 'pytree'}: {len(bad)} leaves outside "
+            f"{sorted(allowed)} — {listing}")
+
+
+# ---------------------------------------------------------------------------
+# budgets
+# ---------------------------------------------------------------------------
+
+BUDGETS_FILENAME = "ANALYSIS_budgets.json"
+
+
+def repo_root() -> str:
+    """Nearest ancestor of this file holding ANALYSIS_budgets.json."""
+    d = os.path.dirname(os.path.abspath(__file__))
+    while True:
+        if os.path.exists(os.path.join(d, BUDGETS_FILENAME)):
+            return d
+        parent = os.path.dirname(d)
+        if parent == d:
+            raise FileNotFoundError(
+                f"{BUDGETS_FILENAME} not found above {__file__}")
+        d = parent
+
+
+def load_budgets() -> dict:
+    with open(os.path.join(repo_root(), BUDGETS_FILENAME)) as fh:
+        return json.load(fh)

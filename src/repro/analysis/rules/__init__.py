@@ -1,0 +1,19 @@
+"""Rule registry.  Each rule module exposes ``RULE`` (id), ``TITLE``,
+``HINT``, and ``check(project) -> list[Finding]``; the driver in
+:mod:`repro.analysis.lint` runs them in id order.  Adding a rule =
+adding a module here and listing it in ``ALL_RULES``.
+"""
+from __future__ import annotations
+
+from repro.analysis.rules import (r001_host_calls, r002_traced_branch,
+                                  r003_jit_static_args, r004_donation,
+                                  r005_key_reuse, r006_pallas_grid,
+                                  r007_dtype_hygiene)
+
+ALL_RULES = [r001_host_calls, r002_traced_branch, r003_jit_static_args,
+             r004_donation, r005_key_reuse, r006_pallas_grid,
+             r007_dtype_hygiene]
+
+RULE_DOCS = {m.RULE: (m.TITLE, m.HINT) for m in ALL_RULES}
+
+__all__ = ["ALL_RULES", "RULE_DOCS"]

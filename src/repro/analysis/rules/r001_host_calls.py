@@ -1,0 +1,65 @@
+"""R001 — host-library call on a traced value.
+
+``np.*`` / ``math.*`` / ``float()`` / ``.item()`` / ``bool()`` /
+``jax.device_get`` applied to a traced value inside jitted/scanned/
+vmapped code forces a device->host sync (or a trace-time error), turning
+the one-sync-per-fit engine contract into one-sync-per-step.  Host calls
+on *static* values (hyperparameters, shapes) are legal trace-time
+arithmetic and are not flagged.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.lint import Finding
+from repro.analysis.rules._taint import FnScanner, stmt_exprs, walk_no_defs
+
+RULE = "R001"
+TITLE = "host-library call on a traced value"
+HINT = ("stay in jax.numpy/lax inside traced code; if a host value is "
+        "really needed, return it and convert after the jitted call "
+        "(one accounted jax.device_get)")
+
+HOST_PREFIXES = ("numpy.", "math.", "scipy.")
+CAST_BUILTINS = {"float", "int", "bool", "complex"}
+SYNC_METHODS = {"item", "tolist", "block_until_ready"}
+SYNC_FUNCS = {"jax.device_get"}
+
+
+class _Scanner(FnScanner):
+
+    def on_stmt(self, s):
+        for expr in stmt_exprs(s):
+            for node in walk_no_defs(expr):
+                if isinstance(node, ast.Call):
+                    self._call(node)
+
+    def _call(self, call):
+        d = self.mod.dotted(call.func)
+        args = list(call.args) + [k.value for k in call.keywords]
+        any_tainted = any(self.tainted(a) for a in args)
+        bad = None
+        if d and d.startswith(HOST_PREFIXES) and any_tainted:
+            bad = f"{d.split('.')[0]}.* call"
+        elif d in CAST_BUILTINS and any_tainted:
+            bad = f"{d}() cast"
+        elif d in SYNC_FUNCS and any_tainted:
+            bad = f"{d}()"
+        elif (isinstance(call.func, ast.Attribute)
+              and call.func.attr in SYNC_METHODS
+              and self.tainted(call.func.value)):
+            bad = f".{call.func.attr}()"
+        if bad:
+            self.findings.append(Finding(
+                rule=RULE, file=self.mod.relpath, line=call.lineno,
+                symbol=self.fi.qualname,
+                message=f"{bad} on a traced value inside traced code "
+                        f"({self.fi.traced_reason})",
+                hint=HINT, code=self.mod.code_line(call)))
+
+
+def check(project):
+    out = []
+    for mod, fi in project.traced_functions():
+        out.extend(_Scanner(project, mod, fi).run())
+    return out

@@ -1,0 +1,48 @@
+"""R002 — Python control flow on a traced value.
+
+``if`` / ``while`` / ternary on a traced value raises
+``TracerBoolConversionError`` at trace time (or worse, silently bakes in
+one branch when the value happens to be concrete on the first call).
+Branching on static hyperparameters (``static_argnames``, keyword-only
+params) and on trace-time facts (``x.ndim``, ``len(params)``) is legal
+and not flagged.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.lint import Finding
+from repro.analysis.rules._taint import FnScanner, stmt_exprs, walk_no_defs
+
+RULE = "R002"
+TITLE = "Python branch on a traced value"
+HINT = ("use jax.lax.cond / lax.select / jnp.where for data-dependent "
+        "control flow, or make the flag a static_argnames/keyword-only "
+        "hyperparameter")
+
+
+class _Scanner(FnScanner):
+
+    def on_stmt(self, s):
+        if isinstance(s, (ast.If, ast.While)) and self.tainted(s.test):
+            kind = "if" if isinstance(s, ast.If) else "while"
+            self._report(s.test, f"Python `{kind}` on a traced value")
+        for expr in stmt_exprs(s):
+            for node in walk_no_defs(expr):
+                if isinstance(node, ast.IfExp) and self.tainted(node.test):
+                    self._report(node.test,
+                                 "ternary condition on a traced value")
+
+    def _report(self, node, msg):
+        self.findings.append(Finding(
+            rule=RULE, file=self.mod.relpath, line=node.lineno,
+            symbol=self.fi.qualname,
+            message=f"{msg} ({self.fi.traced_reason})",
+            hint=HINT, code=self.mod.code_line(node)))
+
+
+def check(project):
+    out = []
+    for mod, fi in project.traced_functions():
+        out.extend(_Scanner(project, mod, fi).run())
+    return out

@@ -1,0 +1,92 @@
+"""R003 — unhashable / dict-typed argument to a jitted function without
+``static_argnames``.
+
+A ``dict`` / ``list`` / ``set`` literal passed per-call to a jitted
+function is a retrace bomb: every distinct Python value is a new trace
+(and dict-of-scalars args never hit the jit cache at all).  Either
+declare the parameter in ``static_argnames`` (hashable config) or pass
+device arrays (a pytree of ``jnp`` arrays is fine — it is the *literal
+containers of Python scalars rebuilt per call* that this rule targets).
+Mutable default values on jitted defs are flagged for the same reason.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.lint import Finding
+
+RULE = "R003"
+TITLE = "unhashable arg to jitted function without static_argnames"
+HINT = ("add the parameter to static_argnames (and make the value "
+        "hashable), or pass device arrays instead of per-call Python "
+        "containers")
+
+UNHASHABLE = (ast.Dict, ast.List, ast.Set,
+              ast.ListComp, ast.SetComp, ast.DictComp)
+
+
+def _params(fi):
+    names = fi.arg_names
+    return names[1:] if names and names[0] == "self" else names
+
+
+def check(project):
+    out = []
+    # call sites of known jit roots
+    for mod in project.modules.values():
+        for call in ast.walk(mod.tree):
+            if not isinstance(call, ast.Call):
+                continue
+            scope = project._enclosing(mod, call)
+            target = project.resolve_ref(mod, call.func, scope)
+            if target is None or not target.is_jit_root:
+                continue
+            params = _params(target)
+            for i, a in enumerate(call.args):
+                name = params[i] if i < len(params) else None
+                if isinstance(a, UNHASHABLE) and \
+                        (name is None or name not in target.static_names):
+                    out.append(Finding(
+                        rule=RULE, file=mod.relpath, line=a.lineno,
+                        symbol=(scope.qualname if scope else ""),
+                        message=f"{type(a).__name__} literal passed to "
+                                f"jitted `{target.qualname}` "
+                                f"(param `{name or '?'}` is not static)",
+                        hint=HINT, code=mod.code_line(a)))
+            for kw in call.keywords:
+                if kw.arg and isinstance(kw.value, UNHASHABLE) and \
+                        kw.arg not in target.static_names:
+                    out.append(Finding(
+                        rule=RULE, file=mod.relpath, line=kw.value.lineno,
+                        symbol=(scope.qualname if scope else ""),
+                        message=f"{type(kw.value).__name__} literal passed "
+                                f"to jitted `{target.qualname}` "
+                                f"(param `{kw.arg}` is not static)",
+                        hint=HINT, code=mod.code_line(kw.value)))
+    # mutable defaults on jitted defs
+    for mod, fi in project.all_functions():
+        if not fi.is_jit_root or isinstance(fi.node, ast.Lambda):
+            continue
+        a = fi.node.args
+        pos = [x.arg for x in getattr(a, "posonlyargs", [])] + \
+              [x.arg for x in a.args]
+        for name, default in zip(pos[len(pos) - len(a.defaults):],
+                                 a.defaults):
+            if isinstance(default, UNHASHABLE) and \
+                    name not in fi.static_names:
+                out.append(Finding(
+                    rule=RULE, file=mod.relpath, line=default.lineno,
+                    symbol=fi.qualname,
+                    message=f"mutable default for param `{name}` of "
+                            f"jitted `{fi.qualname}`",
+                    hint=HINT, code=mod.code_line(default)))
+        for kwarg, default in zip(a.kwonlyargs, a.kw_defaults):
+            if default is not None and isinstance(default, UNHASHABLE) and \
+                    kwarg.arg not in fi.static_names:
+                out.append(Finding(
+                    rule=RULE, file=mod.relpath, line=default.lineno,
+                    symbol=fi.qualname,
+                    message=f"mutable default for param `{kwarg.arg}` of "
+                            f"jitted `{fi.qualname}`",
+                    hint=HINT, code=mod.code_line(default)))
+    return out

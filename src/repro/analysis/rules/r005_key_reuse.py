@@ -1,0 +1,94 @@
+"""R005 — ``jax.random`` key consumed twice without split/fold_in.
+
+Every ``jax.random.*`` consumer (samplers AND ``split`` itself — JAX's
+contract is that a key is used exactly once, for anything) burns the key
+it is given.  Passing the same key name to a second consumer yields
+correlated randomness: identical dropout masks across layers, identical
+permutations across epochs.  Rebinding the name (``key, sub =
+jax.random.split(key)``) resets it; ``fold_in(key, step)`` does NOT
+consume (deriving many streams from one base key is its whole point —
+the engine's per-epoch idiom).  Mutually exclusive ``if`` branches are
+analyzed independently, and loop bodies are scanned twice so
+per-iteration sampling from an un-resplit key surfaces.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.lint import Finding
+from repro.analysis.rules._taint import FnScanner, stmt_exprs, walk_no_defs
+
+RULE = "R005"
+TITLE = "jax.random key reused without split/fold_in"
+HINT = ("derive a fresh key per consumer: `key, sub = jax.random."
+        "split(key)` or `jax.random.fold_in(key, step)`")
+
+# non-consuming jax.random functions: creators take a seed (an int), not
+# a key, and fold_in(key, step) is the SANCTIONED way to derive many
+# streams from one base key (the engine's per-epoch idiom) — neither
+# burns a key
+NON_CONSUMING = {"PRNGKey", "key", "wrap_key_data", "key_data", "clone",
+                 "fold_in"}
+
+
+class _Scanner(FnScanner):
+
+    LOOP_PASSES = 2
+
+    def __init__(self, project, mod, fi):
+        super().__init__(project, mod, fi)
+        self.consumed = {}     # key var name -> line of first consumption
+        self._reported = set()
+
+    def on_stmt(self, s):
+        for expr in stmt_exprs(s):
+            for node in walk_no_defs(expr):
+                if isinstance(node, ast.Call):
+                    self._call(node)
+
+    def _call(self, call):
+        d = self.mod.dotted(call.func)
+        if not d or not d.startswith("jax.random."):
+            return
+        fn = d.rsplit(".", 1)[-1]
+        if fn in NON_CONSUMING:
+            return
+        if not call.args or not isinstance(call.args[0], ast.Name):
+            return
+        name = call.args[0].id
+        if name in self.consumed:
+            key = (name, call.lineno)
+            if key not in self._reported:
+                self._reported.add(key)
+                self.findings.append(Finding(
+                    rule=RULE, file=self.mod.relpath, line=call.lineno,
+                    symbol=self.fi.qualname,
+                    message=f"key `{name}` consumed by jax.random.{fn} but "
+                            f"already consumed at line "
+                            f"{self.consumed[name]}",
+                    hint=HINT, code=self.mod.code_line(call)))
+        else:
+            self.consumed[name] = call.lineno
+
+    def on_rebind(self, name):
+        self.consumed.pop(name, None)
+
+    def fork_state(self):
+        state = super().fork_state()
+        state["consumed"] = dict(self.consumed)
+        return state
+
+    def restore_state(self, state):
+        super().restore_state(state)
+        self.consumed = dict(state["consumed"])
+
+    def merge_state(self, other):
+        super().merge_state(other)
+        self.consumed.update(other["consumed"])
+
+
+def check(project):
+    out = []
+    for mod, fi in project.all_functions():
+        out.extend(_Scanner(project, mod, fi).run())
+    return out

@@ -1,0 +1,73 @@
+"""R006 — Pallas grid floor-division without a divisibility guard.
+
+``grid=(B // block_b,)`` silently drops the last partial tile whenever
+``block_b`` does not divide ``B`` — rows past the last full block are
+never touched by the kernel.  The repo's two sanctioned idioms are
+padding to a multiple first (``pad = (-B) % block_b``) and asserting
+divisibility (``assert S % block_q == 0``); both leave a ``%`` by the
+same divisor in the enclosing function, which is what this rule looks
+for.  A floor-divided grid axis with no matching ``%`` guard anywhere in
+the function is flagged.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.lint import Finding
+from repro.analysis.rules._taint import walk_no_defs
+
+RULE = "R006"
+TITLE = "Pallas grid floor-division without divisibility guard"
+HINT = ("pad the array to a multiple of the block first "
+        "(`pad = (-n) % block`) or `assert n % block == 0` before "
+        "building the grid")
+
+PALLAS_CALL = "jax.experimental.pallas.pallas_call"
+
+
+def _grid_exprs(call):
+    for kw in call.keywords:
+        if kw.arg == "grid":
+            if isinstance(kw.value, (ast.Tuple, ast.List)):
+                yield from kw.value.elts
+            else:
+                yield kw.value
+
+
+def check(project):
+    out = []
+    for mod in project.modules.values():
+        for call in ast.walk(mod.tree):
+            if not isinstance(call, ast.Call) or \
+                    mod.dotted(call.func) != PALLAS_CALL:
+                continue
+            scope = project._enclosing(mod, call)
+            scope_node = scope.node if scope is not None else mod.tree
+            # divisors guarded by a `%` anywhere in the enclosing function
+            guarded = set()
+            assigns = {}
+            for n in walk_no_defs(scope_node) if scope is None else \
+                    ast.walk(scope_node):
+                if isinstance(n, ast.BinOp) and isinstance(n.op, ast.Mod):
+                    guarded.add(ast.dump(n.right))
+                if isinstance(n, ast.Assign) and len(n.targets) == 1 and \
+                        isinstance(n.targets[0], ast.Name):
+                    assigns[n.targets[0].id] = n.value
+            for elt in _grid_exprs(call):
+                # follow one level of `G = A // B` indirection
+                expr = elt
+                if isinstance(expr, ast.Name) and expr.id in assigns:
+                    expr = assigns[expr.id]
+                for node in ast.walk(expr):
+                    if isinstance(node, ast.BinOp) and \
+                            isinstance(node.op, ast.FloorDiv) and \
+                            ast.dump(node.right) not in guarded:
+                        out.append(Finding(
+                            rule=RULE, file=mod.relpath, line=elt.lineno,
+                            symbol=(scope.qualname if scope else ""),
+                            message="grid axis uses `//` with no `%` "
+                                    "divisibility guard in the enclosing "
+                                    "function — a partial tile would be "
+                                    "silently dropped",
+                            hint=HINT, code=mod.code_line(elt)))
+    return out

@@ -1,0 +1,73 @@
+"""R007 — dtype hygiene in traced code.
+
+Array creation without an explicit ``dtype`` yields weak-typed (or
+platform-default) results: ``jnp.arange(n)`` is weak int, ``jnp.asarray
+(True)`` is weak bool, and a stray ``float64`` literal upgrades a whole
+engine pytree when ``jax_enable_x64`` is on.  The engine contract is
+float32/int32 end-to-end (pinned at runtime by
+``repro.analysis.guards.audit_dtypes``); statically, every creation op
+inside traced code must say its dtype, and ``float64`` must not appear
+at all.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.lint import Finding
+from repro.analysis.rules._taint import walk_no_defs
+
+RULE = "R007"
+TITLE = "array creation without explicit dtype in traced code"
+HINT = ("pass dtype= explicitly (jnp.float32 / jnp.int32 / jnp.bool_) so "
+        "weak-type promotion cannot change the engine pytree's dtypes")
+
+# creation ops that default to weak/platform dtypes; value = index into
+# positional args at which dtype may be passed positionally (None: kwarg
+# only in practice)
+CREATE = {
+    "zeros": 1, "ones": 1, "empty": 1, "full": 2,
+    "asarray": 1, "array": 1, "arange": None, "linspace": None, "eye": None,
+}
+NAMESPACES = ("jax.numpy.", "numpy.")
+F64 = {"jax.numpy.float64", "numpy.float64", "jax.numpy.complex128"}
+
+
+def _has_dtype(call, pos_index):
+    if any(kw.arg == "dtype" for kw in call.keywords):
+        return True
+    return pos_index is not None and len(call.args) > pos_index
+
+
+def check(project):
+    out = []
+    for mod, fi in project.traced_functions():
+        for node in walk_no_defs(fi.node):
+            if node is not fi.node and isinstance(
+                    node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if isinstance(node, (ast.Name, ast.Attribute)):
+                d = mod.dotted(node)
+                if d in F64:
+                    out.append(Finding(
+                        rule=RULE, file=mod.relpath, line=node.lineno,
+                        symbol=fi.qualname,
+                        message=f"`{d}` in traced engine code — the engine "
+                                f"contract is float32/int32",
+                        hint=HINT, code=mod.code_line(node)))
+            if not isinstance(node, ast.Call):
+                continue
+            d = mod.dotted(node.func)
+            if not d:
+                continue
+            for ns in NAMESPACES:
+                if d.startswith(ns) and d[len(ns):] in CREATE:
+                    if not _has_dtype(node, CREATE[d[len(ns):]]):
+                        out.append(Finding(
+                            rule=RULE, file=mod.relpath, line=node.lineno,
+                            symbol=fi.qualname,
+                            message=f"`{d.split('.')[-1]}` without an "
+                                    f"explicit dtype in traced code "
+                                    f"({fi.traced_reason})",
+                            hint=HINT, code=mod.code_line(node)))
+                    break
+    return out

@@ -56,8 +56,8 @@ def _weighted_logreg_loss(params, x, y, w) -> jax.Array:
 def fit_logreg(x, y, n_classes: int, steps: int = 300, lr: float = 0.1):
     """Full-batch Adam logistic regression (fast jit'd probe), on the same
     optimizer the training engine uses (repro.optim.adam)."""
-    params = {"w": jnp.zeros((x.shape[1], n_classes)),
-              "b": jnp.zeros((n_classes,))}
+    params = {"w": jnp.zeros((x.shape[1], n_classes), jnp.float32),
+              "b": jnp.zeros((n_classes,), jnp.float32)}
     opt = paper_adam(lr)
 
     def step(carry, _):
@@ -76,8 +76,8 @@ def _fold_fit_predict(x, y, tri, trw, tei, *, n_classes, steps, lr):
     ``x[tei]`` — the body both vmapped fold runners share."""
     opt = paper_adam(lr)
     xi, yi = x[tri], y[tri]
-    params = {"w": jnp.zeros((x.shape[1], n_classes)),
-              "b": jnp.zeros((n_classes,))}
+    params = {"w": jnp.zeros((x.shape[1], n_classes), jnp.float32),
+              "b": jnp.zeros((n_classes,), jnp.float32)}
 
     def step(carry, _):
         p, s = carry

@@ -262,10 +262,10 @@ def _build_fit_engine(loss_fn: Callable, lr: float):
 
         init = (params, opt_state, params,
                 jnp.asarray(jnp.inf, jnp.float32),
-                jnp.asarray(0, jnp.int32), jnp.asarray(True),
+                jnp.asarray(0, jnp.int32), jnp.asarray(True, jnp.bool_),
                 jnp.asarray(0, jnp.int32))
         (_, _, best_p, _, _, _, epochs), (tls, vls) = jax.lax.scan(
-            epoch_step, init, jnp.arange(max_epochs))
+            epoch_step, init, jnp.arange(max_epochs, dtype=jnp.int32))
         return best_p, epochs, tls, vls
 
     return run_fit
@@ -313,7 +313,7 @@ def _build_lanes_fit_engine(loss_fn: Callable, lr: float):
                         jnp.where(on, loss, 0.0))
 
             (p, s), losses = jax.lax.scan(step, (p, s),
-                                          (jnp.arange(n_batches), idx))
+                                          (jnp.arange(n_batches, dtype=jnp.int32), idx))
             tl = jnp.sum(losses) / jnp.maximum(nb_p, 1)
             return p, s, tl, loss_fn(p, val_p)
 
@@ -347,7 +347,7 @@ def _build_lanes_fit_engine(loss_fn: Callable, lr: float):
                 jnp.zeros((L,), jnp.int32), live0,
                 jnp.zeros((L,), jnp.int32))
         (_, _, best_p, _, _, _, epochs), (tls, vls) = jax.lax.scan(
-            epoch_step, init, jnp.arange(max_epochs))
+            epoch_step, init, jnp.arange(max_epochs, dtype=jnp.int32))
         return best_p, epochs, tls, vls
 
     return run_fit_k
@@ -496,7 +496,7 @@ def _build_many_engine(loss_fn: Callable, lr: float):
                         jnp.where(on, loss, 0.0))
 
             (p, s), losses = jax.lax.scan(step, (p, s),
-                                          (jnp.arange(n_batches), idx))
+                                          (jnp.arange(n_batches, dtype=jnp.int32), idx))
             tl = jnp.sum(losses) / jnp.maximum(nb_p, 1)
             return p, s, tl, loss_fn(p, val_p)
 

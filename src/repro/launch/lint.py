@@ -1,0 +1,144 @@
+"""jaxlint CLI — static analysis of the package against the committed
+baseline.
+
+    python -m repro.launch.lint                    # lint src/repro, table
+    python -m repro.launch.lint --json             # machine-readable
+    python -m repro.launch.lint --diff             # only files changed vs main
+    python -m repro.launch.lint --baseline-update  # freeze current findings
+
+Exit 0 when no non-baselined findings; 1 otherwise.  Pure stdlib — this
+entry point never imports jax, so it runs backend-free in CI.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+from typing import List, Optional, Set
+
+from repro.analysis.lint import (build_index, load_baseline, run_rules,
+                                 apply_baseline, write_baseline)
+from repro.analysis.rules import RULE_DOCS
+
+DEFAULT_TARGET = "src/repro"
+DEFAULT_BASELINE = "src/repro/analysis/baseline.json"
+
+
+def find_repo_root(start: Optional[str] = None) -> str:
+    d = os.path.abspath(start or os.getcwd())
+    while True:
+        if os.path.isdir(os.path.join(d, ".git")):
+            return d
+        parent = os.path.dirname(d)
+        if parent == d:
+            return os.path.abspath(start or os.getcwd())
+        d = parent
+
+
+def changed_files(root: str, base: str = "main") -> Optional[Set[str]]:
+    """Repo-relative .py files changed vs ``base`` (committed, staged and
+    untracked).  None when git can't answer (no base ref): lint all."""
+    try:
+        diff = subprocess.run(
+            ["git", "diff", "--name-only", base, "--", "*.py"],
+            cwd=root, capture_output=True, text=True, check=True).stdout
+        untracked = subprocess.run(
+            ["git", "ls-files", "--others", "--exclude-standard", "*.py"],
+            cwd=root, capture_output=True, text=True, check=True).stdout
+    except (OSError, subprocess.CalledProcessError):
+        return None
+    return {line.strip() for line in (diff + untracked).splitlines()
+            if line.strip()}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.launch.lint",
+        description="AST lint of JAX/Pallas contracts (rules R001-R007); "
+                    "see src/repro/analysis/README.md")
+    ap.add_argument("paths", nargs="*", default=None,
+                    help=f"files/dirs to lint (default: {DEFAULT_TARGET})")
+    ap.add_argument("--root", default=None,
+                    help="repo root for relative paths (default: nearest "
+                         "ancestor with .git)")
+    ap.add_argument("--baseline", default=None,
+                    help=f"baseline file (default: {DEFAULT_BASELINE})")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="report everything, ignore the baseline")
+    ap.add_argument("--baseline-update", action="store_true",
+                    help="rewrite the baseline to the current findings "
+                         "(keeps surviving justifications)")
+    ap.add_argument("--diff", action="store_true",
+                    help="report only findings in files changed vs "
+                         "--diff-base (the whole tree is still indexed, "
+                         "so cross-module tracedness stays sound)")
+    ap.add_argument("--diff-base", default="main",
+                    help="git ref --diff compares against (default: main)")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="emit findings as JSON")
+    args = ap.parse_args(argv)
+
+    root = args.root or find_repo_root()
+    paths = args.paths or [DEFAULT_TARGET]
+    baseline_path = os.path.join(
+        root, args.baseline or DEFAULT_BASELINE)
+
+    report_files: Optional[Set[str]] = None
+    if args.diff:
+        report_files = changed_files(root, args.diff_base)
+        if report_files is not None and not report_files:
+            print("lint --diff: no .py files changed vs "
+                  f"{args.diff_base}; nothing to do")
+            return 0
+
+    project = build_index(paths, root)
+    raw = run_rules(project, report_files)
+
+    if args.baseline_update:
+        write_baseline(baseline_path, raw)
+        print(f"baseline updated: {len(raw)} findings frozen in "
+              f"{os.path.relpath(baseline_path, root)} — fill in any "
+              f"'TODO: justify or fix' entries")
+        return 0
+
+    findings = raw if args.no_baseline else \
+        apply_baseline(raw, load_baseline(baseline_path))
+
+    if args.as_json:
+        print(json.dumps({
+            "target": paths, "total": len(findings),
+            "baselined": len(raw) - len(findings),
+            "findings": [f.to_dict() for f in findings]}, indent=1))
+        return 1 if findings else 0
+
+    if not findings:
+        suppressed = len(raw) - len(findings)
+        note = f" ({suppressed} baselined)" if suppressed else ""
+        print(f"jaxlint: clean{note} — "
+              f"{len(project.modules)} modules indexed")
+        return 0
+
+    by_rule: dict = {}
+    for f in findings:
+        by_rule.setdefault(f.rule, []).append(f)
+        where = f"{f.file}:{f.line}"
+        sym = f" [{f.symbol}]" if f.symbol else ""
+        print(f"{where}: {f.rule}{sym} {f.message}")
+        if f.code:
+            print(f"    > {f.code}")
+        if f.hint:
+            print(f"    hint: {f.hint}")
+    print()
+    for rule in sorted(by_rule):
+        title, _ = RULE_DOCS.get(rule, ("?", ""))
+        print(f"  {rule}  {title}: {len(by_rule[rule])}")
+    print(f"jaxlint: {len(findings)} finding(s) not covered by the "
+          f"baseline ({os.path.relpath(baseline_path, root)}); fix them "
+          f"or justify with --baseline-update")
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

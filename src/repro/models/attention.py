@@ -91,13 +91,13 @@ def _sdpa_chunked(q, k, v, *, causal: bool, window: int, chunk: int) -> jax.Arra
     qf = q.astype(jnp.float32) / np.sqrt(hd)
     kc = jnp.moveaxis(k.astype(jnp.float32).reshape(B, nchunks, chunk, H, hd), 1, 0)
     vc = jnp.moveaxis(v.astype(jnp.float32).reshape(B, nchunks, chunk, H, hd), 1, 0)
-    rows = jnp.arange(S)
+    rows = jnp.arange(S, dtype=jnp.int32)
 
     def body(carry, inp):
         m, l, acc = carry                      # (B,H,S), (B,H,S), (B,S,H,hd)
         j, kj, vj = inp
         s = jnp.einsum("bshd,bthd->bhst", qf, kj)          # (B,H,S,chunk)
-        cols = j * chunk + jnp.arange(chunk)
+        cols = j * chunk + jnp.arange(chunk, dtype=jnp.int32)
         ok = jnp.ones((S, chunk), bool)
         if causal:
             ok &= cols[None, :] <= rows[:, None]
@@ -117,7 +117,7 @@ def _sdpa_chunked(q, k, v, *, causal: bool, window: int, chunk: int) -> jax.Arra
     l0 = jnp.zeros((B, H, S), jnp.float32)
     a0 = jnp.zeros((B, S, H, hd), jnp.float32)
     (m, l, acc), _ = jax.lax.scan(
-        body, (m0, l0, a0), (jnp.arange(nchunks), kc, vc))
+        body, (m0, l0, a0), (jnp.arange(nchunks, dtype=jnp.int32), kc, vc))
     out = acc / jnp.maximum(jnp.moveaxis(l, 1, 2), 1e-30)[..., None]
     return out.astype(q.dtype)
 

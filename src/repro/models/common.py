@@ -91,8 +91,8 @@ def seq_shard(x: jax.Array, cfg) -> jax.Array:
 
 def causal_mask(S: int, window: int = 0) -> jax.Array:
     """(S, S) additive mask; ``window`` > 0 adds a sliding-window constraint."""
-    i = jnp.arange(S)[:, None]
-    j = jnp.arange(S)[None, :]
+    i = jnp.arange(S, dtype=jnp.int32)[:, None]
+    j = jnp.arange(S, dtype=jnp.int32)[None, :]
     ok = j <= i
     if window:
         ok &= (i - j) < window

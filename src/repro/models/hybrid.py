@@ -44,7 +44,7 @@ def zamba_hidden(params: dict, cfg: ModelConfig, inputs: dict):
     tokens = inputs["tokens"]
     B, S = tokens.shape
     x = embed(params["embed"], tokens).astype(jnp.dtype(cfg.dtype))
-    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
 
     mblock = (jax.checkpoint(mamba2.mamba_block, static_argnums=(1,))
               if cfg.remat else mamba2.mamba_block)

@@ -101,7 +101,7 @@ def decoder_hidden(params: dict, cfg: ModelConfig, inputs: dict):
         tokens = inputs["tokens"]
         B, S = tokens.shape
         x = embed(params["embed"], tokens).astype(jnp.dtype(cfg.dtype))
-    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
     x, aux = _scan_blocks(params["blocks"], cfg, x, positions,
                           cfg.sliding_window)
     x = norm_apply(params["ln_f"], x, cfg.norm)
@@ -145,7 +145,7 @@ def decoder_prefill_with_cache(params: dict, cfg: ModelConfig,
     B, S = tokens.shape
     assert S <= n_slots
     x = embed(params["embed"], tokens).astype(jnp.dtype(cfg.dtype))
-    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
 
     def body(x, lp):
         x, kv = block_fwd_cache(lp, cfg, x, positions, cfg.sliding_window)
@@ -235,7 +235,7 @@ def vlm_hidden(params: dict, cfg: ModelConfig, inputs: dict):
     B, S = tokens.shape
     x = embed(params["embed"], tokens).astype(jnp.dtype(cfg.dtype))
     img = img.astype(x.dtype)
-    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
 
     xblock = (jax.checkpoint(_cross_block_fwd, static_argnums=(1,))
               if cfg.remat else _cross_block_fwd)
