@@ -12,9 +12,12 @@ throughput extrapolates linearly: every request is an independent
 dispatch).
 
 Writes ``BENCH_serve.json``: throughput (rows/s, req/s), p50/p99
-service-time latency, cache hit-rate, per-path dispatch and compile
-counts, and the acceptance block (distinct batch shapes <= 6, bucketed
-throughput >= 5x naive).
+service-time latency PLUS the shared ``serve.metrics`` latency block
+(queueing — here backlog-drain wait — and service as separate percentile
+series, the same schema ``BENCH_load.json`` uses), cache hit-rate,
+per-path dispatch and compile counts, and the acceptance block (distinct
+batch shapes <= 6, bucketed throughput >= 5x naive).  The live
+arrival-clocked load benchmark is ``benchmarks/loadbench.py``.
 
 Run:  PYTHONPATH=src python benchmarks/servebench.py [--smoke]
       [--requests 10000] [--max-rows 100] [--epochs 15] [--naive-sample
@@ -74,11 +77,11 @@ def run(*, requests: int = 10_000, max_rows: int = 100, epochs: int = 15,
 
     # --- naive per-request jit dispatch (one compile per distinct size) ---
     import jax
-    naive_fn = jax.jit(engine._active_impl)   # fresh jit: separate cache
+    naive_fn = jax.jit(sv._active_apply)      # fresh jit: separate cache
     sample = stream[:min(naive_sample, len(stream))]
     t0 = time.perf_counter()
     for r in sample:
-        np.asarray(naive_fn(jnp.asarray(r.x, jnp.float32)))
+        np.asarray(naive_fn(engine._p_active, jnp.asarray(r.x, jnp.float32)))
     naive_s = time.perf_counter() - t0
     naive_rows = int(sum(len(r.x) for r in sample))
     naive = {

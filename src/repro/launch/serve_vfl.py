@@ -7,12 +7,22 @@ Run:  PYTHONPATH=src python -m repro.launch.serve_vfl --smoke
           --aligned 150 --epochs 30 --requests 5000 --bundle /tmp/apcvfl
       PYTHONPATH=src python -m repro.launch.serve_vfl --load /tmp/apcvfl \
           --requests 1000
+      PYTHONPATH=src python -m repro.launch.serve_vfl --load /tmp/apcvfl \
+          --arrival poisson --rate-rps 300 --slo-ms 100
 
 With ``--bundle`` the exported ``ModelBundle`` is SAVED to that path and
 reloaded before serving, so every run with it proves the save -> load ->
 identical-predictions round trip; ``--load`` skips training entirely and
 serves an existing bundle (the dataset/scenario is rebuilt only to source
 request features).
+
+``--arrival poisson|bursty`` switches from the backlog-drain
+``serve_stream`` to the live serving runtime (``repro.serve.runtime``):
+requests arrive on a seeded virtual clock, the SLO-aware scheduler
+micro-batches them with admission control, and queueing latency is
+reported separately from service latency plus SLO attainment and shed
+rate.  The multi-tenant version of this loop is
+``benchmarks/loadbench.py``.
 """
 from __future__ import annotations
 
@@ -46,6 +56,17 @@ def main(argv=None) -> int:
                     help="probability a request row keeps its real id "
                          "(cache candidate)")
     ap.add_argument("--buckets", default="16,32,64,128,256")
+    ap.add_argument("--arrival", choices=["stream", "poisson", "bursty"],
+                    default="stream",
+                    help="'stream' = drain the request list as a backlog "
+                         "(serve_stream); 'poisson'/'bursty' = live "
+                         "arrival-clocked runtime with SLO micro-batching")
+    ap.add_argument("--rate-rps", type=float, default=200.0,
+                    help="arrival rate for --arrival poisson/bursty")
+    ap.add_argument("--slo-ms", type=float, default=100.0,
+                    help="end-to-end latency SLO for the live runtime")
+    ap.add_argument("--queue-rows", type=int, default=4096,
+                    help="admission bound: queued rows beyond this shed")
     ap.add_argument("--bundle", default=None,
                     help="save the exported bundle here and serve the "
                          "RELOADED copy (round-trip proof)")
@@ -114,23 +135,56 @@ def main(argv=None) -> int:
               f"{bundle.meta['n_cached']} cached latents)")
         bundle = reloaded
 
-    engine = sv.VFLServingEngine(
-        bundle, buckets=[int(b) for b in args.buckets.split(",") if b])
-    requests = sv.make_request_stream(
-        sc.active.x, sc.active.ids, args.requests, seed=args.seed + 1,
-        max_rows=args.max_rows, p_known=args.p_known)
-    stats = sv.serve_stream(engine, requests)
+    buckets = [int(b) for b in args.buckets.split(",") if b]
+    if args.arrival != "stream":
+        from repro.serve import runtime as rt
+        registry = rt.TenantRegistry(buckets=buckets)
+        engine = registry.register("default", bundle)
+        engine.warmup()
+        stream = rt.make_timed_stream(
+            sc.active.x, sc.active.ids, args.requests,
+            tenant="default", arrivals=args.arrival,
+            rate_rps=args.rate_rps, seed=args.seed + 1,
+            max_rows=args.max_rows, p_known=args.p_known)
+        runtime = rt.ServingRuntime(
+            registry, rt.RuntimeConfig(slo_ms=args.slo_ms,
+                                       max_queue_rows=args.queue_rows))
+        stats = runtime.run(stream)
+        lat = stats["latency_ms"]
+        print(f"\n=== {args.arrival} arrivals at {args.rate_rps} req/s: "
+              f"served {stats['served']}/{stats['requests']} requests "
+              f"({stats['rows']} rows) in "
+              f"{stats['virtual_elapsed_ms']:.0f} virtual ms ===")
+        print(f"throughput: {stats['rows_per_s']} rows/s over "
+              f"{stats['dispatches']} micro-batches "
+              f"(mean {stats['mean_batch_rows']} rows)")
+        print(f"queueing  p50/p99: {lat['queue']['p50']} / "
+              f"{lat['queue']['p99']} ms")
+        print(f"service   p50/p99: {lat['service']['p50']} / "
+              f"{lat['service']['p99']} ms")
+        print(f"SLO {args.slo_ms} ms: attainment "
+              f"{stats['slo']['attainment']}  shed rate "
+              f"{stats['shed_rate']}")
+        print(f"compiled batch shapes: {stats['compiled']['by_path']} "
+              f"(distinct: {stats['compiled']['distinct_batch_shapes']})")
+    else:
+        engine = sv.VFLServingEngine(bundle, buckets=buckets)
+        requests = sv.make_request_stream(
+            sc.active.x, sc.active.ids, args.requests, seed=args.seed + 1,
+            max_rows=args.max_rows, p_known=args.p_known)
+        stats = sv.serve_stream(engine, requests)
 
-    print(f"\n=== served {stats['requests']} requests "
-          f"({stats['rows']} rows) in {stats['wall_s']}s ===")
-    print(f"throughput: {stats['rows_per_s']} rows/s "
-          f"({stats['requests_per_s']} req/s)")
-    print(f"latency p50/p99: {stats['latency_ms_p50']} / "
-          f"{stats['latency_ms_p99']} ms")
-    print(f"cache hit-rate: {stats['cache_hit_rate']}  "
-          f"dispatches: {stats['dispatches']}")
-    print(f"compiled batch shapes: {stats['compiled']['by_path']} "
-          f"(distinct: {stats['compiled']['distinct_batch_shapes']})")
+        print(f"\n=== served {stats['requests']} requests "
+              f"({stats['rows']} rows) in {stats['wall_s']}s ===")
+        print(f"throughput: {stats['rows_per_s']} rows/s "
+              f"({stats['requests_per_s']} req/s)")
+        print(f"latency p50/p99: {stats['latency_ms_p50']} / "
+              f"{stats['latency_ms_p99']} ms (service; queueing separate "
+              f"in latency_ms block)")
+        print(f"cache hit-rate: {stats['cache_hit_rate']}  "
+              f"dispatches: {stats['dispatches']}")
+        print(f"compiled batch shapes: {stats['compiled']['by_path']} "
+              f"(distinct: {stats['compiled']['distinct_batch_shapes']})")
     if args.out:
         with open(args.out, "w") as fh:
             json.dump(stats, fh, indent=1)

@@ -1,0 +1,510 @@
+"""Live multi-tenant VFL serving runtime: arrival simulation, SLO-aware
+continuous micro-batching, admission control, and the representation-cache
+lifecycle — layered on the bucketed ``VFLServingEngine`` of ``serve.vfl``.
+
+``serve_stream`` (PR 5) drains a static request list: every request is
+already there, so it can only measure service time and throughput.  A
+live server faces a different problem — requests ARRIVE, queue behind
+each other, and wait for a micro-batch to fill — and its two latency
+components must be measured separately (``serve.metrics``).  This module
+adds that missing half:
+
+* **Arrival simulation** — seeded, fully deterministic request streams
+  with virtual arrival timestamps: ``poisson_arrivals`` (memoryless
+  steady traffic) and ``bursty_arrivals`` (on/off modulated Poisson —
+  flash crowds alternating with lulls).  ``make_timed_stream`` wraps the
+  existing request generator with a clock; ``merge_streams`` interleaves
+  tenants into one global arrival order.
+
+* **Continuous micro-batching with admission control** —
+  ``ServingRuntime.run`` is a discrete-event loop over a virtual clock:
+  arrivals enqueue per tenant (a request that would push its tenant's
+  queue past ``max_queue_rows`` is SHED at admission, never silently
+  dropped mid-flight), a tenant dispatches when its queued rows fill the
+  largest warm bucket OR its head-of-line request has waited the queueing
+  budget (``max_wait_ms``, default half the SLO — service gets the other
+  half), and the clock advances by the measured wall-clock of each
+  dispatch (single-executor model: arrivals during a dispatch queue up
+  behind it).  Queueing latency (dispatch start - arrival) and service
+  latency (dispatch duration) are recorded per request as separate
+  series; SLO attainment is judged on their sum.  For deterministic
+  scheduler tests a ``service_model`` can drive the clock instead of the
+  wall — dispatches still execute for real, only timing is modeled.
+
+* **Multi-tenant registry** — ``TenantRegistry`` puts many
+  ``ModelBundle``s behind ONE ``BatchBucketer`` and ONE pair of jitted
+  apply functions (``vfl._active_apply`` / ``vfl._collab_apply`` are pure
+  in their params, so same-architecture tenants share XLA executables —
+  registering tenant N+1 costs zero compiles).  Per-tenant ``ServeStats``
+  keep accounting isolated, and ``verify_dispatch_parity`` replays every
+  dispatched micro-batch through a fresh SOLO engine per tenant to prove
+  the shared-cache engine is bit-identical to dedicated serving.
+
+* **Representation-cache lifecycle** — the versioned
+  ``vfl.RepresentationCache``: ``engine.refresh_cache`` installs a new
+  training round's re-exported latents (version bump),
+  ``engine.invalidate_cache`` models passive-party dropout — stale
+  caches miss every lookup, so affected requests degrade to the
+  active-only path instead of being served old latents.
+
+``benchmarks/loadbench.py`` drives Poisson + bursty multi-tenant load
+through this runtime into ``BENCH_load.json``; the CLI entry point is
+``repro.launch.serve_vfl --arrival poisson|bursty``.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.serve import vfl as sv
+from repro.serve.metrics import series_summary, slo_report
+
+
+# ---------------------------------------------------------------------------
+# arrival processes (virtual clocks, milliseconds, fully seeded)
+# ---------------------------------------------------------------------------
+
+def poisson_arrivals(n: int, rate_rps: float, *, seed: int = 0,
+                     t0_ms: float = 0.0) -> np.ndarray:
+    """n arrival timestamps (ms) of a homogeneous Poisson process at
+    ``rate_rps`` requests/second: iid exponential inter-arrival gaps."""
+    if n < 0:
+        raise ValueError(f"poisson_arrivals: negative n {n}")
+    if rate_rps <= 0:
+        raise ValueError(f"poisson_arrivals: rate must be positive, "
+                         f"got {rate_rps}")
+    rng = np.random.RandomState(seed)
+    gaps = rng.exponential(1000.0 / rate_rps, size=n)
+    return t0_ms + np.cumsum(gaps)
+
+
+def bursty_arrivals(n: int, *, rate_on_rps: float, rate_off_rps: float,
+                    on_ms: float, off_ms: float, seed: int = 0,
+                    t0_ms: float = 0.0) -> np.ndarray:
+    """n arrival timestamps (ms) of an on/off modulated Poisson process:
+    alternating ON windows (``on_ms`` long, rate ``rate_on_rps``) and OFF
+    windows (``off_ms``, ``rate_off_rps`` — 0 allowed: a true lull).
+    Starts in an ON window.  Memorylessness lets the gap simply be
+    redrawn at each window boundary."""
+    if n < 0:
+        raise ValueError(f"bursty_arrivals: negative n {n}")
+    if rate_on_rps <= 0 or rate_off_rps < 0:
+        raise ValueError("bursty_arrivals: rate_on must be positive and "
+                         "rate_off non-negative")
+    if on_ms <= 0 or off_ms <= 0:
+        raise ValueError("bursty_arrivals: window lengths must be positive")
+    rng = np.random.RandomState(seed)
+    out: List[float] = []
+    t = float(t0_ms)
+    on = True
+    window_end = t + on_ms
+    while len(out) < n:
+        rate = rate_on_rps if on else rate_off_rps
+        if rate <= 0:
+            t = window_end
+            on = not on
+            window_end = t + (on_ms if on else off_ms)
+            continue
+        gap = rng.exponential(1000.0 / rate)
+        if t + gap > window_end:
+            t = window_end
+            on = not on
+            window_end = t + (on_ms if on else off_ms)
+            continue
+        t += gap
+        out.append(t)
+    return np.asarray(out)
+
+
+@dataclass
+class TimedRequest:
+    """A ``ServeRequest`` with an arrival clock and a tenant label."""
+    req: sv.ServeRequest
+    tenant: str
+    t_arrival_ms: float
+    t_dispatch_ms: float = -1.0          # set when its micro-batch started
+    shed: bool = False                   # refused at admission
+
+    @property
+    def rows(self) -> int:
+        return len(self.req.x)
+
+    @property
+    def e2e_ms(self) -> float:
+        return self.req.queue_ms + self.req.latency_ms
+
+
+def make_timed_stream(x_pool, ids_pool, n_requests: int, *,
+                      tenant: str = "t0", arrivals: str = "poisson",
+                      rate_rps: float = 200.0, burst: Optional[dict] = None,
+                      seed: int = 0, max_rows: int = 16,
+                      p_known: float = 0.5, t0_ms: float = 0.0
+                      ) -> List[TimedRequest]:
+    """The PR-5 mixed request generator plus a virtual arrival clock.
+    ``arrivals``: ``"poisson"`` at ``rate_rps``, or ``"bursty"`` with the
+    on/off parameters in ``burst`` (defaults: 4x ``rate_rps`` ON for
+    200 ms, ``rate_rps``/4 OFF for 200 ms)."""
+    reqs = sv.make_request_stream(x_pool, ids_pool, n_requests, seed=seed,
+                                  max_rows=max_rows, p_known=p_known)
+    if arrivals == "poisson":
+        times = poisson_arrivals(n_requests, rate_rps, seed=seed + 7919,
+                                 t0_ms=t0_ms)
+    elif arrivals == "bursty":
+        kw = {"rate_on_rps": 4.0 * rate_rps,
+              "rate_off_rps": rate_rps / 4.0,
+              "on_ms": 200.0, "off_ms": 200.0}
+        kw.update(burst or {})
+        times = bursty_arrivals(n_requests, seed=seed + 7919, t0_ms=t0_ms,
+                                **kw)
+    else:
+        raise ValueError(f"unknown arrival process {arrivals!r} "
+                         f"(poisson | bursty)")
+    return [TimedRequest(r, tenant, float(t))
+            for r, t in zip(reqs, times)]
+
+
+def merge_streams(*streams: Sequence[TimedRequest]) -> List[TimedRequest]:
+    """Interleave per-tenant streams into one global arrival order
+    (stable: simultaneous arrivals keep their input order)."""
+    merged = [tr for s in streams for tr in s]
+    merged.sort(key=lambda tr: tr.t_arrival_ms)
+    return merged
+
+
+# ---------------------------------------------------------------------------
+# multi-tenant bundle registry (one bucketer, one jit cache)
+# ---------------------------------------------------------------------------
+
+class TenantRegistry:
+    """Many tenants' ``ModelBundle``s served behind ONE shared
+    ``BatchBucketer`` and ONE pair of jitted apply functions.
+
+    The engine's predict bodies are pure functions of ``(params, batch)``
+    (``vfl._active_apply`` / ``_collab_apply``), so the shared jit cache
+    keys executables on parameter SHAPES: tenants with the same
+    architecture reuse each other's compiles — registering and warming
+    tenant N+1 costs zero XLA compilations (pinned by tests and by
+    loadbench's steady-state compile gate)."""
+
+    def __init__(self, *, buckets: Sequence[int] = sv.DEFAULT_BUCKETS):
+        self.bucketer = sv.BatchBucketer(buckets)
+        self._jit_fns = (jax.jit(sv._active_apply),
+                        jax.jit(sv._collab_apply))
+        self.engines: Dict[str, sv.VFLServingEngine] = {}
+
+    def register(self, name: str, bundle: sv.ModelBundle
+                 ) -> sv.VFLServingEngine:
+        if name in self.engines:
+            raise ValueError(f"tenant {name!r} already registered")
+        engine = sv.VFLServingEngine(bundle, bucketer=self.bucketer,
+                                     jit_fns=self._jit_fns)
+        self.engines[name] = engine
+        return engine
+
+    def __getitem__(self, name: str) -> sv.VFLServingEngine:
+        return self.engines[name]
+
+    def __contains__(self, name: str) -> bool:
+        return name in self.engines
+
+    def __len__(self) -> int:
+        return len(self.engines)
+
+    def names(self) -> List[str]:
+        return list(self.engines)
+
+    def warmup(self) -> None:
+        """Warm every bucket shape of every tenant through both paths;
+        with the shared jit cache only the FIRST tenant of each distinct
+        architecture actually compiles."""
+        for engine in self.engines.values():
+            engine.warmup()
+
+    def reset_stats(self) -> None:
+        for engine in self.engines.values():
+            engine.reset_stats()
+
+    def jit_cache_sizes(self) -> dict:
+        """Executable counts of the SHARED jit cache (all tenants)."""
+        out = {}
+        for name, fn in zip(("active", "collab"), self._jit_fns):
+            if hasattr(fn, "_cache_size"):
+                out[name] = int(fn._cache_size())
+        return out
+
+    def compiled_shapes(self) -> dict:
+        """Union of dispatched (path, bucket) pairs across tenants."""
+        shapes = set()
+        for engine in self.engines.values():
+            shapes |= engine._shapes
+        by_path: dict = {}
+        for path, bucket in sorted(shapes):
+            by_path.setdefault(path, []).append(bucket)
+        return {"by_path": by_path,
+                "distinct_batch_shapes": len({b for _, b in shapes})}
+
+
+# ---------------------------------------------------------------------------
+# the scheduler
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class RuntimeConfig:
+    """SLO and admission knobs for ``ServingRuntime``.
+
+    ``slo_ms`` is the end-to-end (queue + service) latency objective;
+    ``max_wait_ms`` is the queueing budget that forces a partial batch
+    out (default: half the SLO, leaving the other half for service);
+    ``max_queue_rows`` is the per-tenant admission bound — an arriving
+    request that would push its tenant's queued rows past it is shed."""
+    slo_ms: float = 100.0
+    max_wait_ms: Optional[float] = None
+    max_queue_rows: int = 4096
+
+    @property
+    def wait_budget_ms(self) -> float:
+        return (0.5 * self.slo_ms if self.max_wait_ms is None
+                else float(self.max_wait_ms))
+
+
+@dataclass
+class DispatchRecord:
+    """One micro-batch the runtime executed (kept for parity replay)."""
+    tenant: str
+    t_dispatch_ms: float
+    service_ms: float
+    group: List[TimedRequest] = field(repr=False, default_factory=list)
+
+    @property
+    def rows(self) -> int:
+        return sum(tr.rows for tr in self.group)
+
+
+def _merge_ids(reqs: List[sv.ServeRequest]) -> Optional[np.ndarray]:
+    """Same coalescing rule as ``serve_stream``: anonymous requests ride
+    along under the never-matching filler id so an id-carrying neighbor
+    keeps its cache routing."""
+    if not any(r.ids is not None for r in reqs):
+        return None
+    return np.concatenate([
+        r.ids if r.ids is not None
+        else np.full(len(r.x), sv.ANON_ID, np.int64) for r in reqs])
+
+
+class ServingRuntime:
+    """Discrete-event serving loop over a ``TenantRegistry`` (module
+    docstring).  ``service_model(rows) -> ms`` replaces the measured
+    dispatch wall-clock on the VIRTUAL clock only — dispatches always
+    execute for real — making scheduler behavior deterministic for
+    tests."""
+
+    def __init__(self, registry: TenantRegistry,
+                 config: RuntimeConfig = RuntimeConfig(), *,
+                 service_model: Optional[Callable[[int], float]] = None):
+        self.registry = registry
+        self.config = config
+        self.service_model = service_model
+        self.dispatch_log: List[DispatchRecord] = []
+
+    # --- the event loop ----------------------------------------------------
+
+    def run(self, stream: Sequence[TimedRequest]) -> dict:
+        """Serve a merged timed stream to completion; returns the report
+        dict (shared ``serve.metrics`` schema, per-tenant + overall)."""
+        cfg = self.config
+        unknown = {tr.tenant for tr in stream} - set(self.registry.engines)
+        if unknown:
+            raise ValueError(f"stream names unregistered tenants "
+                             f"{sorted(unknown)}")
+        self.dispatch_log = []
+        stream = sorted(stream, key=lambda tr: tr.t_arrival_ms)
+        queues: Dict[str, deque] = {n: deque() for n in self.registry.names()}
+        queued_rows = {n: 0 for n in queues}
+        max_rows = self.registry.bucketer.max
+        wait_budget = cfg.wait_budget_ms
+        served: List[TimedRequest] = []
+        shed: List[TimedRequest] = []
+        i, n = 0, len(stream)
+        now = stream[0].t_arrival_ms if stream else 0.0
+        t_first = now
+        wall_t0 = time.perf_counter()
+
+        def admit_until(t: float) -> None:
+            nonlocal i
+            while i < n and stream[i].t_arrival_ms <= t:
+                tr = stream[i]
+                i += 1
+                if queued_rows[tr.tenant] + tr.rows > cfg.max_queue_rows:
+                    tr.shed = True
+                    eng = self.registry.engines[tr.tenant]
+                    eng.stats.shed_requests += 1
+                    eng.stats.shed_rows += tr.rows
+                    shed.append(tr)
+                else:
+                    queues[tr.tenant].append(tr)
+                    queued_rows[tr.tenant] += tr.rows
+
+        while i < n or any(queues.values()):
+            admit_until(now)
+            # pick the dispatchable tenant with the oldest head-of-line
+            # request: full bucket, queueing budget exhausted, or nothing
+            # left to wait for (drain)
+            drain = i >= n
+            ready: Optional[str] = None
+            for name, q in queues.items():
+                if not q:
+                    continue
+                full = queued_rows[name] >= max_rows
+                # deadline spelled EXACTLY like the idle-jump candidates
+                # below: (t + w) - t can float-round below w, so comparing
+                # `now - t >= w` after jumping to `t + w` would livelock
+                urgent = now >= q[0].t_arrival_ms + wait_budget
+                if full or urgent or drain:
+                    if ready is None or \
+                            q[0].t_arrival_ms < queues[ready][0].t_arrival_ms:
+                        ready = name
+            if ready is None:
+                # idle: jump the clock to the next event (an arrival or
+                # the earliest head-of-line deadline)
+                candidates = [q[0].t_arrival_ms + wait_budget
+                              for q in queues.values() if q]
+                if i < n:
+                    candidates.append(stream[i].t_arrival_ms)
+                now = max(now, min(candidates))
+                continue
+            # coalesce FIFO up to the largest warm bucket
+            q = queues[ready]
+            group = [q.popleft()]
+            rows = group[0].rows
+            while q and rows + q[0].rows <= max_rows:
+                tr = q.popleft()
+                group.append(tr)
+                rows += tr.rows
+            queued_rows[ready] -= rows
+            engine = self.registry.engines[ready]
+            x = np.concatenate([tr.req.x for tr in group])
+            ids = _merge_ids([tr.req for tr in group])
+            t0 = time.perf_counter()
+            logits = engine.predict(x, ids)
+            measured_ms = (time.perf_counter() - t0) * 1e3
+            service_ms = (measured_ms if self.service_model is None
+                          else float(self.service_model(rows)))
+            off = 0
+            for tr in group:
+                tr.req.logits = logits[off:off + tr.rows]
+                off += tr.rows
+                tr.t_dispatch_ms = now
+                tr.req.queue_ms = now - tr.t_arrival_ms
+                tr.req.latency_ms = service_ms
+                engine.stats.record(tr.req.queue_ms, service_ms)
+                served.append(tr)
+            engine.stats.requests += len(group)
+            self.dispatch_log.append(DispatchRecord(
+                ready, now, service_ms, group))
+            # single executor: the clock is busy for the whole dispatch
+            now += service_ms
+        wall_s = time.perf_counter() - wall_t0
+        return self._report(served, shed, t_first, now, wall_s)
+
+    # --- reporting ---------------------------------------------------------
+
+    def _report(self, served: List[TimedRequest], shed: List[TimedRequest],
+                t_first: float, t_end: float, wall_s: float) -> dict:
+        cfg = self.config
+        elapsed_ms = max(t_end - t_first, 1e-9)
+        tenants = {}
+        for name in self.registry.names():
+            mine = [tr for tr in served if tr.tenant == name]
+            mine_shed = [tr for tr in shed if tr.tenant == name]
+            rows = int(sum(tr.rows for tr in mine))
+            disp = [d for d in self.dispatch_log if d.tenant == name]
+            tenants[name] = {
+                "requests": len(mine),
+                "rows": rows,
+                "shed_requests": len(mine_shed),
+                "shed_rows": int(sum(tr.rows for tr in mine_shed)),
+                "dispatches": len(disp),
+                "mean_batch_rows": round(
+                    rows / len(disp), 2) if disp else 0.0,
+                "rows_per_s": round(rows / (elapsed_ms / 1e3), 1),
+                "latency_ms": {
+                    "queue": series_summary(
+                        [tr.req.queue_ms for tr in mine]),
+                    "service": series_summary(
+                        [tr.req.latency_ms for tr in mine]),
+                    "end_to_end": series_summary(
+                        [tr.e2e_ms for tr in mine]),
+                },
+                "slo": slo_report([tr.e2e_ms for tr in mine], cfg.slo_ms,
+                                  offered=len(mine) + len(mine_shed)),
+            }
+        rows = int(sum(tr.rows for tr in served))
+        offered = len(served) + len(shed)
+        return {
+            "config": {"slo_ms": cfg.slo_ms,
+                       "max_wait_ms": cfg.wait_budget_ms,
+                       "max_queue_rows": cfg.max_queue_rows,
+                       "buckets": list(self.registry.bucketer.buckets)},
+            "requests": offered,
+            "served": len(served),
+            "shed_requests": len(shed),
+            "shed_rate": round(len(shed) / offered, 4) if offered else 0.0,
+            "rows": rows,
+            "dispatches": len(self.dispatch_log),
+            "mean_batch_rows": round(
+                rows / len(self.dispatch_log), 2) if self.dispatch_log
+                else 0.0,
+            "virtual_elapsed_ms": round(elapsed_ms, 3),
+            "measured_wall_s": round(wall_s, 4),
+            "rows_per_s": round(rows / (elapsed_ms / 1e3), 1),
+            "requests_per_s": round(len(served) / (elapsed_ms / 1e3), 1),
+            "latency_ms": {
+                "queue": series_summary(
+                    [tr.req.queue_ms for tr in served]),
+                "service": series_summary(
+                    [tr.req.latency_ms for tr in served]),
+                "end_to_end": series_summary(
+                    [tr.e2e_ms for tr in served]),
+            },
+            "slo": slo_report([tr.e2e_ms for tr in served], cfg.slo_ms,
+                              offered=offered),
+            "tenants": tenants,
+            "compiled": self.registry.compiled_shapes(),
+            "jit_cache_sizes": self.registry.jit_cache_sizes(),
+        }
+
+
+def verify_dispatch_parity(runtime: ServingRuntime,
+                           bundles: Dict[str, sv.ModelBundle]) -> dict:
+    """Replay every micro-batch the runtime dispatched through a FRESH
+    solo ``VFLServingEngine`` per tenant (private jit cache, same bucket
+    set) and compare logits bit-for-bit.  This is the multi-tenant
+    isolation proof: serving behind the shared bucketer/jit cache must
+    equal dedicated per-tenant serving exactly."""
+    out = {}
+    buckets = runtime.registry.bucketer.buckets
+    for tenant, bundle in bundles.items():
+        solo = sv.VFLServingEngine(bundle, buckets=buckets)
+        identical = True
+        max_abs = 0.0
+        batches = 0
+        for rec in runtime.dispatch_log:
+            if rec.tenant != tenant:
+                continue
+            reqs = [tr.req for tr in rec.group]
+            x = np.concatenate([r.x for r in reqs])
+            want = solo.predict(x, _merge_ids(reqs))
+            got = np.concatenate([r.logits for r in reqs])
+            identical = identical and np.array_equal(got, want)
+            if len(got):
+                max_abs = max(max_abs,
+                              float(np.max(np.abs(got - want))))
+            batches += 1
+        out[tenant] = {"batches": batches, "bit_identical": bool(identical),
+                       "max_abs_diff": max_abs}
+    return out

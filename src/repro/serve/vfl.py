@@ -44,7 +44,7 @@ turns a finished training run into that serving path:
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -55,6 +55,7 @@ from repro.checkpoint import ckpt
 from repro.core import autoencoder as ae
 from repro.core import classifier as clf
 from repro.core.psi import id_positions
+from repro.serve.metrics import ServeStats
 
 DEFAULT_BUCKETS = (16, 32, 64, 128, 256)
 
@@ -214,7 +215,12 @@ class BatchBucketer:
                          f"{self.max}; use split()")
 
     def split(self, n: int) -> List[Tuple[int, int, int]]:
-        """Chunk n rows into dispatches: [(start, rows, bucket), ...]."""
+        """Chunk n rows into dispatches: [(start, rows, bucket), ...].
+        ``n = 0`` is a valid empty batch -> no dispatches; negative row
+        counts are a caller bug and raise instead of emitting a bogus
+        negative-row dispatch."""
+        if n < 0:
+            raise ValueError(f"split: negative row count {n}")
         out, start = [], 0
         while n - start > self.max:
             out.append((start, self.max, self.max))
@@ -233,14 +239,28 @@ class RepresentationCache:
     """On-device passive-latent cache keyed by row id: the Z_p rows the
     active party received for the PSI-aligned users, gathered per request
     without any host round-trip for the latents themselves (only the
-    id -> slot lookup is host-side)."""
+    id -> slot lookup is host-side).
 
-    def __init__(self, ids: np.ndarray, z):
+    The cache is **versioned** for the lifecycle a long-lived server
+    needs: a fresh training round re-exports latents -> ``refresh``
+    installs the new arrays and bumps ``version``; a passive party that
+    drops out or is known to have drifted -> ``invalidate`` marks the
+    cache stale WITHOUT discarding version history.  A stale cache never
+    serves: every lookup misses (and is counted as a miss), so the engine
+    degrades to the active-only path — the survey's dropout scenario —
+    instead of silently predicting from old latents."""
+
+    def __init__(self, ids: np.ndarray, z, *, version: int = 1):
+        self.version = int(version)
+        self.stale = False
+        self.hits = 0
+        self.misses = 0
+        self._install(ids, z)
+
+    def _install(self, ids: np.ndarray, z) -> None:
         ids = np.asarray(ids, np.int64)
         self._slot = id_positions(ids)
         self.z = jnp.asarray(z, jnp.float32)       # (n, z_p), uploaded once
-        self.hits = 0
-        self.misses = 0
 
     def __len__(self) -> int:
         return len(self._slot)
@@ -250,9 +270,29 @@ class RepresentationCache:
         total = self.hits + self.misses
         return self.hits / total if total else 0.0
 
+    def refresh(self, ids: np.ndarray, z) -> int:
+        """Install a newly exported latent set (a fresh training round's
+        ``cache_ids``/``cache_z``), clear staleness, bump + return the
+        version.  Hit/miss counters survive — they describe the serving
+        stream, not one latent generation."""
+        self._install(ids, z)
+        self.stale = False
+        self.version += 1
+        return self.version
+
+    def invalidate(self) -> None:
+        """Mark every cached latent stale (passive dropout / drift): all
+        lookups miss until the next ``refresh``."""
+        self.stale = True
+
     def lookup(self, ids: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
-        """(hit_mask bool (n,), slot idx int32 (n,) — 0 where missed)."""
+        """(hit_mask bool (n,), slot idx int32 (n,) — 0 where missed).
+        Stale caches miss everything by construction."""
         ids = np.asarray(ids)
+        if self.stale:
+            self.misses += len(ids)
+            return (np.zeros(len(ids), bool),
+                    np.zeros(len(ids), np.int32))
         idx = np.fromiter((self._slot.get(int(i), -1) for i in ids),
                           np.int64, count=len(ids))
         hit = idx >= 0
@@ -268,17 +308,28 @@ class RepresentationCache:
 # the serving engine
 # ---------------------------------------------------------------------------
 
-@dataclass
-class ServeStats:
-    requests: int = 0
-    rows: int = 0
-    dispatches: Dict[str, int] = field(default_factory=dict)
-    padded_rows: int = 0                 # rows of bucket padding dispatched
-    latencies_ms: List[float] = field(default_factory=list)
+# the two predict bodies as PURE functions of (params, batch): jitting a
+# pure function instead of a bound method means the compiled executable is
+# keyed on param *shapes*, not param *values* — so a TenantRegistry can put
+# many tenants' bundles behind ONE shared jit cache (same architecture =
+# same executable), and a tenant served there is bit-identical to a solo
+# engine jitting the very same function on its own.
 
-    def percentile_ms(self, q: float) -> float:
-        return float(np.percentile(self.latencies_ms, q)) \
-            if self.latencies_ms else 0.0
+def _standardize(p: dict, x):
+    return (x - p["mean"]) * p["inv_scale"]
+
+
+def _active_apply(p: dict, x):
+    """Paper headline mode: the distilled student alone."""
+    z = ae.encode(p["g3"], _standardize(p, x))
+    return clf.logreg_logits(p["head"], z)
+
+
+def _collab_apply(p: dict, x, zp):
+    """Joint-teacher mode for cached (PSI-aligned) users."""
+    za = ae.encode(p["g1a"], _standardize(p, x))
+    zj = jnp.concatenate([za, zp], axis=1).astype(jnp.float32)
+    return clf.logreg_logits(p["head_joint"], ae.encode(p["g2"], zj))
 
 
 class VFLServingEngine:
@@ -294,14 +345,20 @@ class VFLServingEngine:
     ``jit_cache_sizes()`` the XLA-level executable counts."""
 
     def __init__(self, bundle: ModelBundle, *,
-                 buckets: Sequence[int] = DEFAULT_BUCKETS):
+                 buckets: Sequence[int] = DEFAULT_BUCKETS,
+                 bucketer: Optional[BatchBucketer] = None,
+                 jit_fns: Optional[Tuple] = None):
+        """``bucketer``/``jit_fns`` inject SHARED infrastructure (one
+        bucketer + one pair of jitted apply functions across many
+        tenants' engines — see ``runtime.TenantRegistry``); by default
+        each engine owns a private pair, which compiles to the same
+        executables (same pure functions, same shapes)."""
         self.bundle = bundle
-        self.bucketer = BatchBucketer(buckets)
+        self.bucketer = bucketer if bucketer is not None \
+            else BatchBucketer(buckets)
         self.stats = ServeStats()
         self._shapes: set = set()
         dev = lambda t: jax.tree.map(jnp.asarray, t)
-        self._g3 = dev(bundle.g3)
-        self._head = dev(bundle.head_active)
         scale = np.asarray(bundle.x_scale, np.float32)
         if not np.all(np.isfinite(scale)) or np.any(scale == 0.0):
             raise ValueError("bundle x_scale must be finite and nonzero "
@@ -309,32 +366,48 @@ class VFLServingEngine:
                              "to 1 before export)")
         self._mean = jnp.asarray(bundle.x_mean, jnp.float32)
         self._inv_scale = 1.0 / jnp.asarray(scale)
-        self._active_fn = jax.jit(self._active_impl)
+        self._head = dev(bundle.head_active)
+        self._p_active = {"g3": dev(bundle.g3), "head": self._head,
+                          "mean": self._mean, "inv_scale": self._inv_scale}
+        if jit_fns is not None:
+            self._active_fn, shared_collab = jit_fns
+        else:
+            self._active_fn, shared_collab = (jax.jit(_active_apply),
+                                              jax.jit(_collab_apply))
         self.cache: Optional[RepresentationCache] = None
         self._collab_fn = None
+        self._p_collab = None
         if bundle.supports_collaborative:
             self.cache = RepresentationCache(bundle.cache_ids,
                                              bundle.cache_z)
-            self._g1a = dev(bundle.g1_active)
-            self._g2 = dev(bundle.g2)
             self._head_joint = dev(bundle.head_joint)
-            self._collab_fn = jax.jit(self._collab_impl)
+            self._p_collab = {"g1a": dev(bundle.g1_active),
+                              "g2": dev(bundle.g2),
+                              "head_joint": self._head_joint,
+                              "mean": self._mean,
+                              "inv_scale": self._inv_scale}
+            self._collab_fn = shared_collab
 
-    # --- the two predict paths (jitted per bucket shape) -------------------
+    # --- representation-cache lifecycle ------------------------------------
 
-    def _scale(self, x):
-        return (x - self._mean) * self._inv_scale
+    def refresh_cache(self, ids: np.ndarray, z) -> int:
+        """Install freshly re-exported passive latents (a new training
+        round's ``bundle.cache_ids``/``cache_z``); returns the bumped
+        cache version.  Only meaningful on a collaborative engine."""
+        if self.cache is None:
+            raise ValueError("refresh_cache: this bundle has no "
+                             "collaborative path (no cache to refresh)")
+        return self.cache.refresh(ids, z)
 
-    def _active_impl(self, x):
-        """Paper headline mode: the distilled student alone."""
-        z = ae.encode(self._g3, self._scale(x))
-        return clf.logreg_logits(self._head, z)
+    def invalidate_cache(self) -> None:
+        """Degrade to active-only for cached ids (passive dropout): the
+        cache goes stale, every lookup misses until ``refresh_cache``."""
+        if self.cache is not None:
+            self.cache.invalidate()
 
-    def _collab_impl(self, x, zp):
-        """Joint-teacher mode for cached (PSI-aligned) users."""
-        za = ae.encode(self._g1a, self._scale(x))
-        zj = jnp.concatenate([za, zp], axis=1).astype(jnp.float32)
-        return clf.logreg_logits(self._head_joint, ae.encode(self._g2, zj))
+    @property
+    def cache_version(self) -> Optional[int]:
+        return None if self.cache is None else self.cache.version
 
     # --- dispatch ----------------------------------------------------------
 
@@ -359,9 +432,10 @@ class VFLServingEngine:
                 ib = np.zeros((bucket,), np.int32)
                 ib[:rows] = zp_idx[start:start + rows]
                 zp = self.cache.gather(ib)
-                logits = self._collab_fn(jnp.asarray(xb), zp)
+                logits = self._collab_fn(self._p_collab, jnp.asarray(xb),
+                                         zp)
             else:
-                logits = self._active_fn(jnp.asarray(xb))
+                logits = self._active_fn(self._p_active, jnp.asarray(xb))
             # the ONE sanctioned device->host sync per dispatch — explicit
             # jax.device_get so analysis.guards.no_host_sync can account
             # it (an implicit np.asarray would trip the guard as a stray)
@@ -446,7 +520,8 @@ class ServeRequest:
     x: np.ndarray                        # (n, D) feature rows
     ids: Optional[np.ndarray] = None     # (n,) row ids (None = anonymous)
     logits: Optional[np.ndarray] = None
-    latency_ms: float = 0.0
+    latency_ms: float = 0.0              # service time of the batch
+    queue_ms: float = 0.0                # wait before that batch dispatched
 
     @property
     def labels(self) -> np.ndarray:
@@ -483,9 +558,13 @@ def serve_stream(engine: VFLServingEngine, requests: List[ServeRequest], *,
     ``coalesce=True`` greedily packs consecutive requests into one
     micro-batch up to the largest bucket (the batched-serving mode);
     ``False`` dispatches one request per engine call (still bucketed).
-    Latency is *service time* — the wall-clock of the micro-batch that
-    completed the request, i.e. what the user waits on top of queueing —
-    recorded per request so p50/p99 reflect the request mix."""
+    Two latency series are recorded per request (``serve.metrics``
+    schema, shared with the arrival-clocked runtime): *service time* —
+    the wall-clock of the micro-batch that completed it — and *queueing
+    time* — how long it waited in the backlog before that batch
+    dispatched (every request of a static list is treated as arriving at
+    stream start, so queueing here measures backlog drain; the
+    Poisson/bursty arrival clock lives in ``serve.runtime``)."""
     t_start = time.perf_counter()
     max_rows = engine.bucketer.max
     i = 0
@@ -500,6 +579,7 @@ def serve_stream(engine: VFLServingEngine, requests: List[ServeRequest], *,
                 rows += len(requests[i].x)
                 i += 1
         t0 = time.perf_counter()
+        wait_ms = (t0 - t_start) * 1e3
         x = np.concatenate([r.x for r in group])
         if any(r.ids is not None for r in group):
             # anonymous requests ride along under the never-matching
@@ -517,7 +597,8 @@ def serve_stream(engine: VFLServingEngine, requests: List[ServeRequest], *,
             r.logits = logits[off:off + len(r.x)]
             off += len(r.x)
             r.latency_ms = dt_ms
-            engine.stats.latencies_ms.append(dt_ms)
+            r.queue_ms = wait_ms
+            engine.stats.record(wait_ms, dt_ms)
         engine.stats.requests += len(group)
     wall_s = time.perf_counter() - t_start
     total_rows = int(sum(len(r.x) for r in requests))
@@ -529,6 +610,9 @@ def serve_stream(engine: VFLServingEngine, requests: List[ServeRequest], *,
         "requests_per_s": round(len(requests) / max(wall_s, 1e-9), 1),
         "latency_ms_p50": round(engine.stats.percentile_ms(50), 3),
         "latency_ms_p99": round(engine.stats.percentile_ms(99), 3),
+        # queueing and service as separate percentile series — the one
+        # stats schema servebench and loadbench share (serve.metrics)
+        "latency_ms": engine.stats.latency_summary(),
         "cache_hit_rate": (round(engine.cache.hit_rate, 4)
                            if engine.cache else None),
         "dispatches": dict(engine.stats.dispatches),

@@ -439,6 +439,8 @@ def test_budgets_file_has_contract_keys():
     assert budgets["train_fit"] == {"warm_compiles": 0, "host_syncs": 1}
     assert budgets["train_lanes_fit"]["host_syncs"] == 1
     assert budgets["serve_stream"]["max_batch_shapes"] == 6
+    assert budgets["load_stream"] == {"warm_compiles": 0,
+                                      "slo_attainment_min": 0.99}
     assert "float32" in budgets["engine_dtypes"]
 
 

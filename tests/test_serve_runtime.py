@@ -1,0 +1,372 @@
+"""Live serving runtime tests (``repro.serve.runtime``): deterministic
+arrival processes, the SLO micro-batching scheduler and its admission
+control, the multi-tenant registry's shared-jit-cache promise and
+bit-identical parity vs solo engines, and the representation-cache
+lifecycle (refresh on re-export, stale caches degrading to active-only).
+
+One tiny model is trained once per module (1 epoch — runtime correctness
+does not depend on convergence); three tenants are exported from it with
+different serving-head budgets, which makes them genuinely distinct
+models of identical architecture (the shared-executable case)."""
+import numpy as np
+import pytest
+
+from repro.analysis import guards
+from repro.core import pipeline
+from repro.experiments.specs import ScenarioSpec
+from repro.experiments.sweeps import build_scenario
+from repro.serve import runtime as rt
+from repro.serve import vfl as sv
+
+
+@pytest.fixture(scope="module")
+def trained():
+    sc = build_scenario(ScenarioSpec(dataset="bcw", n_aligned=120,
+                                     n_active_features=5, seed=0))
+    result = pipeline.run_apcvfl(sc, seed=0, max_epochs=1)
+    return sc, result
+
+
+@pytest.fixture(scope="module")
+def bundles(trained):
+    sc, result = trained
+    return {f"t{k}": sv.export_bundle(result, sc, head_steps=steps)
+            for k, steps in enumerate((60, 120, 180))}
+
+
+def _registry(bundles):
+    reg = rt.TenantRegistry()
+    for name, b in bundles.items():
+        reg.register(name, b)
+    return reg
+
+
+def _timed(sc, n, *, tenant, seed, t0_ms=0.0, max_rows=8, **kw):
+    return rt.make_timed_stream(sc.active.x, sc.active.ids, n,
+                                tenant=tenant, seed=seed, t0_ms=t0_ms,
+                                max_rows=max_rows, **kw)
+
+
+# ---------------------------------------------------------------------------
+# arrival processes
+# ---------------------------------------------------------------------------
+
+def test_poisson_arrivals_deterministic_rate_and_order():
+    a = rt.poisson_arrivals(4000, 200.0, seed=3)
+    b = rt.poisson_arrivals(4000, 200.0, seed=3)
+    assert np.array_equal(a, b)                      # seeded = replayable
+    assert np.all(np.diff(a) >= 0)                   # nondecreasing clock
+    gaps = np.diff(np.concatenate([[0.0], a]))
+    assert abs(gaps.mean() - 5.0) < 0.5              # 200 req/s = 5 ms gap
+    c = rt.poisson_arrivals(10, 200.0, seed=4, t0_ms=1000.0)
+    assert c[0] >= 1000.0
+
+
+def test_bursty_arrivals_concentrate_in_on_windows():
+    times = rt.bursty_arrivals(2000, rate_on_rps=1000.0, rate_off_rps=10.0,
+                               on_ms=100.0, off_ms=100.0, seed=5)
+    assert np.all(np.diff(times) >= 0)
+    # window phase: [0,100) on, [100,200) off, ... — the ON share of a
+    # 100:1 rate ratio must dominate
+    phase = np.floor(times / 100.0).astype(int) % 2
+    on_frac = float((phase == 0).mean())
+    assert on_frac > 0.9
+    # a zero OFF rate is a true lull: every arrival lands in an ON window
+    quiet = rt.bursty_arrivals(500, rate_on_rps=1000.0, rate_off_rps=0.0,
+                               on_ms=50.0, off_ms=50.0, seed=6)
+    assert np.all((np.floor(quiet / 50.0).astype(int) % 2) == 0)
+
+
+def test_arrival_validation_and_stream_builder(trained):
+    sc, _ = trained
+    with pytest.raises(ValueError, match="rate must be positive"):
+        rt.poisson_arrivals(5, 0.0)
+    with pytest.raises(ValueError, match="negative n"):
+        rt.poisson_arrivals(-1, 10.0)
+    with pytest.raises(ValueError, match="window lengths"):
+        rt.bursty_arrivals(5, rate_on_rps=10.0, rate_off_rps=1.0,
+                           on_ms=0.0, off_ms=10.0)
+    with pytest.raises(ValueError, match="unknown arrival"):
+        _timed(sc, 5, tenant="t0", seed=0, arrivals="uniform")
+    stream = _timed(sc, 50, tenant="t0", seed=0, rate_rps=100.0)
+    assert all(tr.tenant == "t0" for tr in stream)
+    assert [tr.req.rid for tr in stream] == list(range(50))
+    ts = [tr.t_arrival_ms for tr in stream]
+    assert ts == sorted(ts)
+    # merge is a stable global sort across tenants
+    other = _timed(sc, 50, tenant="t1", seed=1, rate_rps=100.0)
+    merged = rt.merge_streams(stream, other)
+    assert len(merged) == 100
+    mts = [tr.t_arrival_ms for tr in merged]
+    assert mts == sorted(mts)
+
+
+# ---------------------------------------------------------------------------
+# scheduler: bucket-fill dispatch, SLO deadlines, admission control
+# ---------------------------------------------------------------------------
+
+def test_backlog_coalesces_to_largest_bucket(bundles, trained):
+    """Everything arrives at once -> the scheduler must fill the largest
+    warm bucket per dispatch, not dribble out one request at a time."""
+    sc, _ = trained
+    reg = _registry(bundles)
+    # every request exactly 8 rows -> exact fill arithmetic
+    x8 = np.asarray(sc.active.x[:8], np.float32)
+    stream = [rt.TimedRequest(sv.ServeRequest(i, x8, None), "t0", 0.0)
+              for i in range(40)]
+    runtime = rt.ServingRuntime(reg, rt.RuntimeConfig(slo_ms=100.0),
+                                service_model=lambda rows: 1.0)
+    report = runtime.run(stream)
+    assert report["served"] == 40 and report["shed_requests"] == 0
+    # 320 rows / 256-row max bucket -> one full batch + one 64-row batch
+    assert [d.rows for d in runtime.dispatch_log] == [256, 64]
+    assert report["rows"] == 320
+
+
+def test_slo_deadline_forces_partial_dispatch(bundles, trained):
+    """Sparse arrivals never fill a bucket — the queueing budget (half
+    the SLO) must force partial batches out in time.  The deterministic
+    service model makes the assertion exact: every end-to-end latency
+    stays within wait-budget + blocking + service."""
+    sc, _ = trained
+    reg = _registry(bundles)
+    stream = _timed(sc, 60, tenant="t0", seed=8, rate_rps=50.0,
+                    max_rows=4)
+    cfg = rt.RuntimeConfig(slo_ms=50.0)        # wait budget 25 ms
+    runtime = rt.ServingRuntime(reg, cfg, service_model=lambda rows: 2.0)
+    report = runtime.run(stream)
+    assert report["served"] == 60
+    # partial batches happened (nothing close to the 256-row bucket)
+    assert max(d.rows for d in runtime.dispatch_log) < reg.bucketer.max
+    # queueing <= wait budget + one blocking dispatch; e2e within SLO
+    assert report["latency_ms"]["queue"]["max"] <= 25.0 + 2.0 + 1e-6
+    assert report["slo"]["attainment"] == 1.0
+    assert report["latency_ms"]["service"]["max"] == 2.0
+
+
+def test_admission_control_sheds_past_queue_bound(bundles, trained):
+    """A flood past the per-tenant row bound is refused at admission:
+    shed requests get no logits and are excluded from latency series;
+    admitted requests still complete."""
+    sc, _ = trained
+    reg = _registry(bundles)
+    x4 = np.asarray(sc.active.x[:4], np.float32)
+    stream = [rt.TimedRequest(sv.ServeRequest(i, x4, None), "t0", 0.0)
+              for i in range(200)]               # 800 rows at t=0
+    cfg = rt.RuntimeConfig(slo_ms=100.0, max_queue_rows=300)
+    runtime = rt.ServingRuntime(reg, cfg, service_model=lambda rows: 1.0)
+    report = runtime.run(stream)
+    assert report["shed_requests"] > 0
+    assert report["served"] + report["shed_requests"] == 200
+    assert report["shed_rate"] == pytest.approx(
+        report["shed_requests"] / 200, abs=1e-4)
+    shed = [tr for tr in stream if tr.shed]
+    assert all(tr.req.logits is None for tr in shed)
+    served = [tr for tr in stream if not tr.shed]
+    assert all(tr.req.logits is not None and len(tr.req.logits) == 4
+               for tr in served)
+    assert report["latency_ms"]["queue"]["count"] == len(served)
+    # per-tenant stats carry the shed accounting too
+    assert report["tenants"]["t0"]["shed_requests"] == len(shed)
+    assert reg["t0"].stats.shed_rows == 4 * len(shed)
+
+
+def test_unknown_tenant_and_duplicate_register_raise(bundles, trained):
+    sc, _ = trained
+    reg = _registry(bundles)
+    with pytest.raises(ValueError, match="already registered"):
+        reg.register("t0", bundles["t0"])
+    runtime = rt.ServingRuntime(reg, service_model=lambda rows: 1.0)
+    ghost = _timed(sc, 3, tenant="nobody", seed=0)
+    with pytest.raises(ValueError, match="unregistered tenants"):
+        runtime.run(ghost)
+
+
+# ---------------------------------------------------------------------------
+# multi-tenant registry: shared jit cache + parity vs solo engines
+# ---------------------------------------------------------------------------
+
+def test_tenant_n_plus_1_warms_with_zero_compiles(bundles):
+    """The shared-jit-cache promise: the first tenant pays the bucket
+    compiles, every further same-architecture tenant warms for free."""
+    reg = rt.TenantRegistry()
+    names = list(bundles)
+    reg.register(names[0], bundles[names[0]])
+    reg[names[0]].warmup()
+    with guards.compile_counter(budget=0,
+                                label="incremental tenant warmup"):
+        for n in names[1:]:
+            reg.register(n, bundles[n])
+            reg[n].warmup()
+    sizes = reg.jit_cache_sizes()
+    n_buckets = len(reg.bucketer.buckets)
+    assert 0 < sizes["active"] <= n_buckets      # shared across 3 tenants
+    assert 0 < sizes["collab"] <= n_buckets
+
+
+def test_multi_tenant_serving_bit_identical_to_solo(bundles, trained):
+    """Three tenants behind one bucketer/jit cache, mixed Poisson and
+    bursty arrivals: every dispatched micro-batch must equal a fresh
+    SOLO engine's output bit-for-bit, and per-tenant accounting must add
+    up to the overall report."""
+    sc, _ = trained
+    reg = _registry(bundles)
+    reg.warmup()
+    streams = [
+        _timed(sc, 40, tenant="t0", seed=11, rate_rps=300.0),
+        _timed(sc, 40, tenant="t1", seed=12, rate_rps=300.0),
+        _timed(sc, 40, tenant="t2", seed=13, arrivals="bursty",
+               rate_rps=300.0),
+    ]
+    runtime = rt.ServingRuntime(reg, rt.RuntimeConfig(slo_ms=200.0))
+    report = runtime.run(rt.merge_streams(*streams))
+    assert report["served"] == 120
+    parity = rt.verify_dispatch_parity(runtime, bundles)
+    assert set(parity) == {"t0", "t1", "t2"}
+    for name, p in parity.items():
+        assert p["batches"] > 0, name
+        assert p["bit_identical"], (name, p)
+        assert p["max_abs_diff"] == 0.0
+    assert sum(t["rows"] for t in report["tenants"].values()) \
+        == report["rows"]
+    assert sum(t["dispatches"] for t in report["tenants"].values()) \
+        == report["dispatches"]
+    # the registry's compiled shapes stay within the shared bucket set
+    assert report["compiled"]["distinct_batch_shapes"] \
+        <= len(reg.bucketer.buckets)
+
+
+def test_report_schema_queue_and_service_separate(bundles, trained):
+    sc, _ = trained
+    reg = _registry(bundles)
+    stream = _timed(sc, 30, tenant="t1", seed=14, rate_rps=100.0)
+    runtime = rt.ServingRuntime(reg, rt.RuntimeConfig(slo_ms=150.0),
+                                service_model=lambda rows: 3.0)
+    report = runtime.run(stream)
+    lat = report["latency_ms"]
+    for series in ("queue", "service", "end_to_end"):
+        for key in ("count", "mean", "max", "p50", "p90", "p99"):
+            assert key in lat[series], (series, key)
+    assert lat["queue"]["count"] == lat["service"]["count"] == 30
+    # e2e = queue + service, so its percentiles dominate service's
+    assert lat["end_to_end"]["p50"] >= lat["service"]["p50"]
+    assert report["slo"]["offered"] == 30
+    assert report["virtual_elapsed_ms"] > 0
+    assert report["tenants"]["t1"]["latency_ms"]["queue"]["count"] == 30
+    # idle tenants report empty-but-valid blocks
+    assert report["tenants"]["t0"]["latency_ms"]["queue"]["count"] == 0
+
+
+# ---------------------------------------------------------------------------
+# representation-cache lifecycle
+# ---------------------------------------------------------------------------
+
+@pytest.fixture()
+def collab_probe(trained, bundles):
+    """Feature rows whose ids ARE in the representation cache."""
+    sc, _ = trained
+    b = bundles["t0"]
+    ids = np.asarray(b.cache_ids[:8])
+    pos = {int(v): k for k, v in enumerate(np.asarray(sc.active.ids))}
+    x = np.asarray(sc.active.x[[pos[int(i)] for i in ids]], np.float32)
+    return x, ids
+
+
+def test_reexport_refreshes_cache_bit_identically_and_bumps_version(
+        trained, bundles, collab_probe):
+    """A fresh training round (same seed/data -> deterministic engine)
+    re-exports the same latents: refresh must install them bit-identically
+    and bump the version, leaving predictions unchanged."""
+    sc, _ = trained
+    x, ids = collab_probe
+    engine = sv.VFLServingEngine(bundles["t0"])
+    before = engine.predict(x, ids)
+    assert engine.cache_version == 1
+    result2 = pipeline.run_apcvfl(sc, seed=0, max_epochs=1)   # fresh round
+    bundle2 = sv.export_bundle(result2, sc, head_steps=60)
+    assert np.array_equal(np.asarray(bundle2.cache_z),
+                          np.asarray(bundles["t0"].cache_z))
+    v = engine.refresh_cache(bundle2.cache_ids, bundle2.cache_z)
+    assert v == 2 and engine.cache_version == 2
+    assert not engine.cache.stale
+    assert np.array_equal(np.asarray(engine.cache.z),
+                          np.asarray(bundles["t0"].cache_z))
+    after = engine.predict(x, ids)
+    assert np.array_equal(before, after)
+
+
+def test_stale_cache_serves_active_only_and_counts_misses(
+        bundles, collab_probe):
+    """Passive dropout: after invalidate, requests for cached ids MUST
+    NOT see the old latents — they fall back to the active-only path
+    (bit-identical to predict_active), count as misses, and raise no
+    exception.  A later refresh restores collaborative serving."""
+    x, ids = collab_probe
+    engine = sv.VFLServingEngine(bundles["t0"])
+    collab = engine.predict(x, ids)
+    assert engine.cache.hits == len(ids)
+    engine.invalidate_cache()
+    assert engine.cache.stale
+    engine.cache.hits = engine.cache.misses = 0
+    stale = engine.predict(x, ids)                  # no exception
+    assert engine.cache.hits == 0
+    assert engine.cache.misses == len(ids)          # counted, not hidden
+    active_only = engine.predict_active(x)
+    assert np.array_equal(stale, active_only)       # never old latents
+    assert not np.array_equal(stale, collab)        # paths truly differ
+    engine.refresh_cache(bundles["t0"].cache_ids, bundles["t0"].cache_z)
+    restored = engine.predict(x, ids)
+    assert np.array_equal(restored, collab)
+    assert engine.cache.version == 2
+
+
+def test_missing_latents_fall_back_per_row(bundles, collab_probe):
+    """Rows whose ids were never exported (missing latents) go active-
+    only row-wise while cached neighbors stay collaborative."""
+    x, ids = collab_probe
+    engine = sv.VFLServingEngine(bundles["t0"])
+    mixed_ids = ids.copy()
+    mixed_ids[::2] = -(np.arange(len(ids[::2])) + 10)   # unknown users
+    out = engine.predict(x, mixed_ids)
+    known = np.nonzero(mixed_ids >= 0)[0]
+    missing = np.nonzero(mixed_ids < 0)[0]
+    want_known = engine.predict(x[known], ids[known])
+    want_missing = engine.predict_active(x[missing])
+    assert np.max(np.abs(out[known] - want_known)) < 1e-4
+    assert np.max(np.abs(out[missing] - want_missing)) < 1e-4
+
+
+def test_lifecycle_on_active_only_bundle(bundles):
+    """Engines without a collaborative path: invalidate is a no-op,
+    refresh is a loud error (there is no cache to refresh)."""
+    b = bundles["t0"]
+    bundle = sv.ModelBundle(meta=dict(b.meta), g3=b.g3,
+                            head_active=b.head_active,
+                            x_mean=b.x_mean, x_scale=b.x_scale)
+    assert not bundle.supports_collaborative
+    engine = sv.VFLServingEngine(bundle)
+    assert engine.cache_version is None
+    engine.invalidate_cache()                       # harmless no-op
+    with pytest.raises(ValueError, match="no cache to refresh"):
+        engine.refresh_cache(np.asarray([1]), np.zeros((1, 4), np.float32))
+
+
+def test_runtime_serves_through_stale_cache_gracefully(
+        bundles, trained):
+    """The dropout scenario end-to-end: invalidate one tenant's cache
+    mid-fleet, run a stream with cache-eligible ids — every request is
+    served (active-only), nothing raises, misses are counted."""
+    sc, _ = trained
+    reg = _registry(bundles)
+    reg["t1"].invalidate_cache()
+    streams = [_timed(sc, 25, tenant=t, seed=20 + k, rate_rps=200.0,
+                      p_known=0.9)
+               for k, t in enumerate(("t0", "t1"))]
+    runtime = rt.ServingRuntime(reg, rt.RuntimeConfig(slo_ms=200.0),
+                                service_model=lambda rows: 2.0)
+    report = runtime.run(rt.merge_streams(*streams))
+    assert report["served"] == 50
+    assert reg["t1"].cache.hits == 0                # stale: no hit ever
+    assert reg["t1"].cache.misses > 0
+    assert reg["t0"].cache.hits > 0                 # healthy tenant kept
+    assert set(reg["t1"].stats.dispatches) == {"active"}

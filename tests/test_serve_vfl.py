@@ -138,6 +138,60 @@ def test_bucketer_fit_and_split():
         sv.BatchBucketer(())
 
 
+def test_bucketer_split_boundaries():
+    """Edge cases of the dispatch chunker: the empty batch, exact bucket
+    edges, one-over edges, oversize remainders, and the negative-count
+    caller bug (which used to emit a bogus negative-row dispatch)."""
+    b = sv.BatchBucketer((16, 32, 64))
+    assert b.split(0) == []                        # valid empty batch
+    assert b.split(1) == [(0, 1, 16)]
+    assert b.split(16) == [(0, 16, 16)]            # exact smallest edge
+    assert b.split(17) == [(0, 17, 32)]            # one over an edge
+    assert b.split(65) == [(0, 64, 64), (64, 1, 16)]
+    # max-multiple: no empty tail dispatch
+    assert b.split(128) == [(0, 64, 64), (64, 64, 64)]
+    assert b.split(129) == [(0, 64, 64), (64, 64, 64), (128, 1, 16)]
+    with pytest.raises(ValueError, match="negative row count"):
+        b.split(-5)
+    # every dispatch covers its rows exactly once, in order
+    for n in (0, 1, 31, 64, 100, 200, 321):
+        chunks = sv.BatchBucketer((16, 32, 64)).split(n)
+        covered = 0
+        for start, rows, bucket in chunks:
+            assert start == covered and 0 < rows <= bucket
+            assert bucket in (16, 32, 64)
+            covered += rows
+        assert covered == n
+
+
+def test_serve_stream_records_queue_and_service_separately(trained):
+    """The shared serve.metrics schema from the backlog driver: queueing
+    (backlog wait) and service (dispatch wall) as separate pairwise
+    series, e2e their sum, and the flat p50/p99 keys still aliasing the
+    service series for PR-5 consumers."""
+    sc, _, bundle = trained
+    engine = sv.VFLServingEngine(bundle)
+    reqs = sv.make_request_stream(sc.active.x, sc.active.ids, 40, seed=9,
+                                  max_rows=10)
+    stats = sv.serve_stream(engine, reqs)
+    lat = stats["latency_ms"]
+    for series in ("queue", "service", "end_to_end"):
+        for key in ("count", "mean", "max", "p50", "p90", "p99"):
+            assert key in lat[series], (series, key)
+        assert lat[series]["count"] == 40
+    assert len(engine.stats.queue_ms) == len(engine.stats.service_ms) == 40
+    # backlog drain: later dispatches waited longer, first waited ~0
+    assert engine.stats.queue_ms[0] <= engine.stats.queue_ms[-1]
+    e2e = engine.stats.e2e_ms()
+    assert e2e == [q + s for q, s in zip(engine.stats.queue_ms,
+                                         engine.stats.service_ms)]
+    assert stats["latency_ms_p50"] == round(engine.stats.percentile_ms(50), 3)
+    # the pairwise-append contract is enforced, not assumed
+    engine.stats.queue_ms.append(1.0)
+    with pytest.raises(ValueError, match="pairwise"):
+        engine.stats.e2e_ms()
+
+
 def test_mixed_stream_compiles_bounded_shapes(trained):
     """The bucketer promise: whatever the request-size mix, distinct
     dispatched batch shapes stay within the bucket set (and so does the
