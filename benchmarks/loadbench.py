@@ -10,7 +10,13 @@ three load segments through the SLO-aware micro-batching scheduler:
 * **bursty**  — on/off modulated flash-crowd traffic;
 * **overload** — a short burst far past capacity against a small
   admission bound, proving load shedding engages (shed rate > 0) while
-  admitted requests still complete.
+  admitted requests still complete;
+* **int8** — every tenant re-registered as a quantized twin
+  (``serve.quant``) behind the SAME registry: warming the twins must
+  cost zero compiles (pre-dequantized params keep the fp32 pytree
+  shape), the segment's rows/s must hold >= 0.9x the fp32 poisson
+  segment, and each tenant's fp32-vs-int8 parity must sit inside the
+  pinned ``serve.quant`` bounds.
 
 Each segment reports queueing latency and service latency as SEPARATE
 percentile series (the ``serve.metrics`` schema BENCH_serve.json also
@@ -46,11 +52,15 @@ from repro.serve import vfl as sv
 def _segment(registry, bundles, scenarios, *, arrivals: str,
              requests: int, rate_rps: float, slo_ms: float,
              max_queue_rows: int, max_rows: int, seed: int,
-             burst: dict | None = None) -> dict:
+             burst: dict | None = None,
+             names: list | None = None) -> dict:
     """One load segment: per-tenant timed streams -> merged -> runtime,
-    with steady-state compiles counted and dispatch parity replayed."""
+    with steady-state compiles counted and dispatch parity replayed.
+    ``names`` restricts the segment to a tenant subset (the int8 segment
+    drives only the quantized twins)."""
     streams = []
-    for k, name in enumerate(registry.names()):
+    for k, name in enumerate(names if names is not None
+                             else registry.names()):
         sc = scenarios[name]
         streams.append(rt.make_timed_stream(
             sc.active.x, sc.active.ids, requests, tenant=name,
@@ -104,8 +114,12 @@ def run(*, tenants: int = 3, requests: int = 2000, rate_rps: float = 400.0,
             if name != first:
                 registry.register(name, b)
                 registry[name].warmup()
-    print(f"# warmup: {warm0.count} compiles for {first}, "
-          f"{warm_rest.count} incremental for the other "
+    # snapshot now: CompileTally.count is LIVE (global counter minus
+    # start), so reading it after later segments would inflate it
+    warm0_compiles = warm0.count
+    incr_compiles = warm_rest.count
+    print(f"# warmup: {warm0_compiles} compiles for {first}, "
+          f"{incr_compiles} incremental for the other "
           f"{tenants - 1} tenants (shared jit cache)", flush=True)
 
     seg_kw = dict(requests=requests, rate_rps=rate_rps, slo_ms=slo_ms,
@@ -140,6 +154,42 @@ def run(*, tenants: int = 3, requests: int = 2000, rate_rps: float = 400.0,
           f"served={overload['served']}|"
           f"slo={overload['slo']['attainment']}", flush=True)
 
+    # --- int8: quantized twins behind the SAME registry -------------------
+    # each tenant gets an int8 twin (serve.quant); pre-dequantized params
+    # keep the fp32 pytree shape, so warming the twins must cost zero
+    # compiles — a mixed fp32/int8 fleet shares one jit cache.
+    from repro.serve import quant
+    int8_names, bundles_int8 = [], {}
+    with guards.compile_counter() as warm_int8:
+        for name in list(bundles):
+            twin = f"{name}-int8"
+            registry.register(twin, bundles[name], quantize="int8")
+            registry[twin].warmup()
+            scenarios[twin] = scenarios[name]
+            bundles_int8[twin] = bundles[name]
+            int8_names.append(twin)
+    int8_warm_compiles = warm_int8.count        # snapshot (live counter)
+    int8_seg = _segment(registry, bundles_int8, scenarios,
+                        arrivals="poisson", names=int8_names, **seg_kw)
+    parity_bounds = {}
+    for name in bundles:
+        sc = scenarios[name]
+        parity_bounds[name] = quant.parity_report(
+            bundles[name], sc.active.x, sc.active.y,
+            n_classes=sc.n_classes)
+    int8_seg["quant_parity"] = parity_bounds
+    int8_seg["warm_compiles"] = int8_warm_compiles
+    segments["int8"] = int8_seg
+    worst_dlogit = max(p["max_abs_logit_delta"]
+                       for p in parity_bounds.values())
+    worst_f1 = max(p["f1_macro_delta"] for p in parity_bounds.values())
+    print(f"loadbench/int8/t{tenants}x{requests},"
+          f"rows_per_s={int8_seg['rows_per_s']:.0f}|"
+          f"warm_compiles={int8_warm_compiles}|"
+          f"max_dlogit={worst_dlogit:.4f}|"
+          f"max_f1_delta={worst_f1:.4f}|"
+          f"slo={int8_seg['slo']['attainment']}", flush=True)
+
     parity_ok = all(
         t["bit_identical"]
         for mode in ("poisson", "bursty")
@@ -158,15 +208,33 @@ def run(*, tenants: int = 3, requests: int = 2000, rate_rps: float = 400.0,
         "stream_compiles_ok": all(
             segments[m]["xla_compiles_stream"] <= budgets["warm_compiles"]
             for m in ("poisson", "bursty")),
-        "tenant_incremental_compiles": warm_rest.count,
-        "shared_jit_ok": warm_rest.count == 0,
+        "tenant_incremental_compiles": incr_compiles,
+        "shared_jit_ok": incr_compiles == 0,
         "parity_bit_identical": parity_ok,
         "shed_exercised": overload["shed_rate"] > 0.0,
+        # int8 twins: zero extra compiles, throughput at parity with the
+        # fp32 poisson segment, quantization error inside serve.quant's
+        # pinned bounds, dispatch bit-identical to dedicated int8 serving
+        "int8_warm_compiles": int8_warm_compiles,
+        "int8_shared_jit_ok": int8_warm_compiles == 0,
+        "int8_rows_per_s": int8_seg["rows_per_s"],
+        "int8_throughput_ratio": round(
+            int8_seg["rows_per_s"]
+            / max(segments["poisson"]["rows_per_s"], 1e-9), 3),
+        "int8_throughput_ok": int8_seg["rows_per_s"]
+            >= 0.9 * segments["poisson"]["rows_per_s"],
+        "int8_parity_bound_ok": (
+            worst_dlogit <= quant.MAX_LOGIT_DELTA
+            and worst_f1 <= quant.MAX_F1_DELTA),
+        "int8_dispatch_bit_identical": all(
+            t["bit_identical"] for t in int8_seg["parity"].values()),
     }
     acceptance["ok"] = all((
         acceptance["slo_ok"], acceptance["stream_compiles_ok"],
         acceptance["shared_jit_ok"], acceptance["parity_bit_identical"],
-        acceptance["shed_exercised"]))
+        acceptance["shed_exercised"], acceptance["int8_shared_jit_ok"],
+        acceptance["int8_parity_bound_ok"],
+        acceptance["int8_dispatch_bit_identical"]))
     print(f"# acceptance: slo_ok={acceptance['slo_ok']} "
           f"({acceptance['slo_attainment_poisson']}/"
           f"{acceptance['slo_attainment_bursty']} >= "
@@ -174,14 +242,19 @@ def run(*, tenants: int = 3, requests: int = 2000, rate_rps: float = 400.0,
           f"stream_compiles_ok={acceptance['stream_compiles_ok']}, "
           f"shared_jit_ok={acceptance['shared_jit_ok']}, "
           f"parity={parity_ok}, "
-          f"shed_exercised={acceptance['shed_exercised']}", flush=True)
+          f"shed_exercised={acceptance['shed_exercised']}, "
+          f"int8: shared_jit={acceptance['int8_shared_jit_ok']} "
+          f"throughput={acceptance['int8_throughput_ratio']}x "
+          f"parity_bound={acceptance['int8_parity_bound_ok']} "
+          f"bit_identical={acceptance['int8_dispatch_bit_identical']}",
+          flush=True)
 
     payload = {
         "name": f"loadbench/bcw/t{tenants}/r{requests}/rps{rate_rps:g}",
         "train": {"epochs": epochs, "wall_s": round(train_s, 2),
                   "tenants": train_log},
-        "warmup": {"first_tenant_compiles": warm0.count,
-                   "incremental_tenant_compiles": warm_rest.count},
+        "warmup": {"first_tenant_compiles": warm0_compiles,
+                   "incremental_tenant_compiles": incr_compiles},
         "config": {"tenants": tenants, "requests_per_tenant": requests,
                    "rate_rps_per_tenant": rate_rps, "slo_ms": slo_ms,
                    "max_rows": max_rows, "max_queue_rows": max_queue_rows,
@@ -189,6 +262,7 @@ def run(*, tenants: int = 3, requests: int = 2000, rate_rps: float = 400.0,
         "poisson": segments["poisson"],
         "bursty": segments["bursty"],
         "overload": segments["overload"],
+        "int8": segments["int8"],
         "acceptance": acceptance,
     }
     if out_json:

@@ -3,7 +3,7 @@
 #   comm_footprint  -> paper Fig. 6 + Table 2 communication columns
 #   kernelbench     -> Pallas kernel oracle checks + CPU ref timings
 #   trainbench      -> scan training engine / K-party vmapped throughput
-#   roofline        -> EXPERIMENTS.md "Roofline" terms from dry-run artifacts
+#   roofline        -> VFL-stage FLOPs/bytes via compiled cost_analysis
 #   accuracy        -> paper Fig. 5 (quick subset) + Table 2 metric columns
 #
 # ``--full`` runs the complete 48-scenario accuracy sweep (hours on 1 CPU).
@@ -37,12 +37,7 @@ def main() -> None:
     trainbench.run(rows=2048, epochs=10)
     sys.stdout.flush()
 
-    for r in roofline.run(csv=False, mesh_filter=""):
-        tag = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
-        print(f"{tag},{r['step_time_bound_s']*1e6:.0f},"
-              f"bound={r['bottleneck']}|Tc={r['t_compute_s']:.3e}|"
-              f"Tm={r['t_memory_s']:.3e}|Tx={r['t_collective_s']:.3e}|"
-              f"useful={r['useful_fraction']:.2f}")
+    roofline.run(csv=False, out_json="BENCH_roofline.json")
     sys.stdout.flush()
 
     if not args.skip_accuracy:

@@ -15,8 +15,11 @@ Writes ``BENCH_serve.json``: throughput (rows/s, req/s), p50/p99
 service-time latency PLUS the shared ``serve.metrics`` latency block
 (queueing — here backlog-drain wait — and service as separate percentile
 series, the same schema ``BENCH_load.json`` uses), cache hit-rate,
-per-path dispatch and compile counts, and the acceptance block (distinct
-batch shapes <= 6, bucketed throughput >= 5x naive).  The live
+per-path dispatch and compile counts, an **int8 section** (the same
+stream through ``VFLServingEngine(quantize="int8")`` with the pinned
+``serve.quant.parity_report`` vs fp32), and the acceptance block
+(distinct batch shapes <= 6, bucketed throughput >= 5x naive, int8
+throughput >= 0.9x fp32 inside the parity bounds).  The live
 arrival-clocked load benchmark is ``benchmarks/loadbench.py``.
 
 Run:  PYTHONPATH=src python benchmarks/servebench.py [--smoke]
@@ -98,6 +101,27 @@ def run(*, requests: int = 10_000, max_rows: int = 100, epochs: int = 15,
           f"rows_per_s={naive['rows_per_s']:.0f}|"
           f"compiles={naive['compiles']}", flush=True)
 
+    # --- int8 quantized path: same stream, pinned fp32 parity -------------
+    from repro.serve import quant
+    q_engine = sv.VFLServingEngine(bundle, quantize="int8")
+    q_engine.warmup()
+    q_stream = sv.make_request_stream(sc.active.x, sc.active.ids, requests,
+                                      seed=seed + 1, max_rows=max_rows,
+                                      p_known=p_known)
+    with guards.compile_counter() as q_tally:
+        quantized = sv.serve_stream(q_engine, q_stream)
+    quantized["xla_compiles_stream"] = q_tally.count
+    parity = quant.parity_report(bundle, sc.active.x, sc.active.y,
+                                 n_classes=sc.n_classes)
+    quantized["parity"] = parity
+    print(f"servebench/int8/r{requests},"
+          f"{1e6 * quantized['wall_s'] / max(quantized['rows'], 1):.1f},"
+          f"rows_per_s={quantized['rows_per_s']:.0f}|"
+          f"max_dlogit={parity['max_abs_logit_delta']:.4f}|"
+          f"flip_rate={parity['pred_flip_rate']:.4f}|"
+          f"f1_delta={parity['f1_macro_delta']:.4f}|"
+          f"compression={parity['compression']}x", flush=True)
+
     speedup = bucketed["rows_per_s"] / max(naive["rows_per_s"], 1e-9)
     shapes = bucketed["compiled"]["distinct_batch_shapes"]
     acceptance = {
@@ -109,13 +133,28 @@ def run(*, requests: int = 10_000, max_rows: int = 100, epochs: int = 15,
         "speedup_ok": speedup >= MIN_SPEEDUP,
         "xla_compiles_stream": bucketed["xla_compiles_stream"],
         "stream_compiles_ok": bucketed["xla_compiles_stream"] == 0,
+        # int8 acceptance: no slower than fp32 (pre-dequantized serving
+        # params keep the jitted fp32 path; 0.9 absorbs runner noise) and
+        # inside the pinned parity bounds of serve.quant
+        "int8_rows_per_s": quantized["rows_per_s"],
+        "int8_throughput_ratio": round(
+            quantized["rows_per_s"] / max(bucketed["rows_per_s"], 1e-9), 3),
+        "int8_throughput_ok":
+            quantized["rows_per_s"] >= 0.9 * bucketed["rows_per_s"],
+        "int8_parity_ok": (
+            parity["max_abs_logit_delta"] <= quant.MAX_LOGIT_DELTA
+            and parity["rel_logit_delta"] <= quant.MAX_REL_LOGIT_DELTA
+            and parity["f1_macro_delta"] <= quant.MAX_F1_DELTA),
     }
     print(f"# acceptance: {shapes} batch shapes "
           f"(<= {MAX_BATCH_SHAPES}: {acceptance['shapes_ok']}), "
           f"{speedup:.1f}x naive throughput "
           f"(>= {MIN_SPEEDUP}x: {acceptance['speedup_ok']}), "
           f"{bucketed['xla_compiles_stream']} warmed-stream compiles "
-          f"(== 0: {acceptance['stream_compiles_ok']})", flush=True)
+          f"(== 0: {acceptance['stream_compiles_ok']}), "
+          f"int8 {acceptance['int8_throughput_ratio']}x fp32 "
+          f"(ok: {acceptance['int8_throughput_ok']}), "
+          f"int8 parity ok: {acceptance['int8_parity_ok']}", flush=True)
 
     payload = {
         "name": f"servebench/bcw/r{requests}/mr{max_rows}",
@@ -125,6 +164,7 @@ def run(*, requests: int = 10_000, max_rows: int = 100, epochs: int = 15,
                    "p_known": p_known, "seed": seed},
         "bucketed": bucketed,
         "naive": naive,
+        "int8": quantized,
         "acceptance": acceptance,
     }
     if out_json:

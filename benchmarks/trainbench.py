@@ -184,12 +184,46 @@ def _lane_occupancy(results) -> dict:
     return out
 
 
-def run_sweep(epochs: int = 30, seeds: int = 5, out_json="BENCH_sweep.json",
-              csv: bool = True) -> dict:
+# PR 5's recorded sweep speedups (replicated / sequential wall) on the
+# 2-core CI container — the yardstick each re-run reports its delta
+# against.  On a SINGLE-core host the ratio's ceiling is ~1.06: lane
+# batching removes dispatch overhead but the lanes' arithmetic still
+# shares one core, so a lower ratio there is expected, not a regression
+# (BENCH_scale.json demonstrates the same engine scaling with real
+# device counts).
+_SWEEP_BASELINE_SPEEDUP = {"apcvfl": 0.82, "apcvfl_aligned_only": 1.14}
+
+
+def _median_wall(fn, repeats: int):
+    """Median warm wall-clock of ``fn`` over ``repeats`` runs, plus the
+    LAST run's result and the total compile count (snapshotted — the
+    tally is a live property)."""
+    from repro.analysis import guards
+
+    walls, res = [], None
+    with guards.compile_counter() as tally:
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            res = fn()
+            walls.append(time.perf_counter() - t0)
+    compiles = tally.count
+    return float(np.median(walls)), res, compiles
+
+
+def run_sweep(epochs: int = 30, seeds: int = 5, repeats: int = 3,
+              out_json="BENCH_sweep.json", csv: bool = True) -> dict:
     """Replica-lane sweep engine vs sequential per-seed execution: one
     grid cell x ``seeds`` replicas for each method with a replicated
     runner (full apcvfl protocol + the aligned-only adaptation), plus the
     smoke spec's per-method wall times; writes ``out_json``.
+
+    Methodology: both paths are compile-warmed first, then timed
+    ``repeats`` times each and the MEDIAN wall is reported (single warm
+    runs on a shared CPU container jitter by 10-20%, which used to
+    swallow the effect being measured).  Each record carries the PR 5
+    baseline speedup and this run's delta against it, plus a machine
+    note — on a 1-core host the ratio is dispatch-overhead-only (see
+    ``_SWEEP_BASELINE_SPEEDUP``).
 
     ``bs=32`` keeps the stages in the dispatch-bound regime the lane
     engine targets (PR 2's K-party setting).  Expect the aligned-only
@@ -199,10 +233,14 @@ def run_sweep(epochs: int = 30, seeds: int = 5, out_json="BENCH_sweep.json",
     CPU."""
     from dataclasses import replace
 
-    from repro.analysis import guards
     from repro.experiments import (ExperimentSpec, MethodSpec,
                                    build_scenario, get_method, sweep)
     from repro.launch.experiment import smoke_spec
+
+    try:
+        n_cpu = len(os.sched_getaffinity(0))
+    except AttributeError:          # non-linux fallback
+        n_cpu = os.cpu_count() or 1
 
     # --- replicated vs sequential, per replicable method ------------------
     bs = 32
@@ -218,40 +256,50 @@ def run_sweep(epochs: int = 30, seeds: int = 5, out_json="BENCH_sweep.json",
         seq_spec = replace(spec, replicate=False)
         for s in (seq_spec, spec):        # warm both compile caches
             sweep(s)
-        t0 = time.time()
-        with guards.compile_counter() as seq_tally:
-            seq_res = sweep(seq_spec)
-        t_seq = time.time() - t0
-        t0 = time.time()
-        with guards.compile_counter() as rep_tally:
-            rep_res = sweep(spec)
-        t_rep = time.time() - t0
+        t_seq, seq_res, seq_compiles = _median_wall(
+            lambda: sweep(seq_spec), repeats)
+        t_rep, rep_res, rep_compiles = _median_wall(
+            lambda: sweep(spec), repeats)
 
         cell = build_scenario(next(iter(spec.scenarios())))
         steps = sum(_cell_steps(r.epochs, _stage_rows(m.method, cell), bs)
                     for r in seq_res)
+        baseline = _SWEEP_BASELINE_SPEEDUP.get(m.method)
+        speedup = round(t_seq / t_rep, 3)
         bench = {
             "name": f"trainbench/sweep/{m.method}/S{seeds}/e{epochs}",
             "grid": {"dataset": "bcw", "aligned": 150, "seeds": seeds,
                      "method": m.method, "max_epochs": epochs,
                      "batch_size": bs},
             "total_steps": steps,
+            "repeats": repeats,
             "sequential_wall_s": round(t_seq, 3),
             "replicated_wall_s": round(t_rep, 3),
-            "speedup": round(t_seq / t_rep, 3),
+            "speedup": speedup,
+            "baseline_speedup": baseline,
+            "speedup_delta_vs_baseline":
+                round(speedup - baseline, 3) if baseline else None,
+            "cpus_visible": n_cpu,
+            "machine_note": (
+                "medians of warm repeats; on a 1-core host the "
+                "replicated/sequential ratio measures dispatch overhead "
+                "only (ceiling ~1.06) — the PR 5 baseline was a 2-core "
+                "container" if n_cpu <= 1 else
+                "medians of warm repeats on a multi-core host"),
             "sequential_steps_per_s": round(steps / t_seq, 1),
             "replicated_steps_per_s": round(steps / t_rep, 1),
             "lane_occupancy": _lane_occupancy(rep_res),
             # warmed runs: compile stability proof (0 = jit caches held)
-            "xla_compiles_warm_sequential": seq_tally.count,
-            "xla_compiles_warm_replicated": rep_tally.count,
+            "xla_compiles_warm_sequential": seq_compiles,
+            "xla_compiles_warm_replicated": rep_compiles,
         }
         replicas[m.method] = bench
         if csv:
             print(f"{bench['name']},{1e6 * t_rep / max(steps, 1):.0f},"
                   f"replicated={bench['replicated_steps_per_s']:.0f}sps|"
                   f"sequential={bench['sequential_steps_per_s']:.0f}sps|"
-                  f"speedup={bench['speedup']:.2f}x", flush=True)
+                  f"speedup={bench['speedup']:.2f}x|"
+                  f"baseline={baseline}x", flush=True)
 
     # --- per-method wall time of one smoke-spec cell ----------------------
     mspec_all = replace(smoke_spec(), overrides={"max_epochs": epochs})

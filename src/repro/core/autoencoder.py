@@ -57,6 +57,27 @@ def reconstruct(params: dict, x: jax.Array) -> jax.Array:
     return mlp_apply(params["dec"], encode(params, x))
 
 
+def fused_mlp_apply(params: dict, x: jax.Array, *,
+                    final_act: bool = False) -> jax.Array:
+    """``mlp_apply`` through the fused Pallas kernel when the MLP is the
+    2-layer Table-3 shape (one fused fwd pass + closed-form VJP);
+    arbitrary-depth MLPs fall back to the jnp layer loop.  The branch is
+    on pytree STRUCTURE (layer count), a trace-time constant."""
+    if len([k for k in params if k.startswith("w")]) != 2:
+        return mlp_apply(params, x, final_act=final_act)
+    from repro.kernels import ops as kops
+    return kops.fused_mlp2(x, params["w0"], params["b0"], params["w1"],
+                           params["b1"], final_act=final_act)
+
+
+def fused_encode(params: dict, x: jax.Array) -> jax.Array:
+    return fused_mlp_apply(params["enc"], x)
+
+
+def fused_reconstruct(params: dict, x: jax.Array) -> jax.Array:
+    return fused_mlp_apply(params["dec"], fused_encode(params, x))
+
+
 def recon_loss(params: dict, batch: dict) -> jax.Array:
     x = batch["x"]
     return jnp.mean(jnp.square(x - reconstruct(params, x)))
@@ -71,3 +92,35 @@ def masked_recon_loss(params: dict, batch: dict) -> jax.Array:
     se = jnp.square(x - reconstruct(params, x)) * fm
     per_row = jnp.sum(se, axis=-1) / jnp.maximum(jnp.sum(fm), 1.0)
     return jnp.sum(per_row * rw) / jnp.maximum(jnp.sum(rw), 1.0)
+
+
+def make_recon_loss(use_kernel: bool = False):
+    """``recon_loss`` with the reconstruction routed through the fused
+    lane-MLP kernel (``kernels.lane_mlp``) when ``use_kernel=True`` —
+    identical math (kernel grads are exact vs the jnp path), one fused
+    pass per MLP instead of a per-layer HBM round-trip."""
+    if not use_kernel:
+        return recon_loss
+
+    def loss(params: dict, batch: dict) -> jax.Array:
+        x = batch["x"]
+        return jnp.mean(jnp.square(x - fused_reconstruct(params, x)))
+
+    loss.cache_key = ("repro.core.autoencoder.make_recon_loss", True)
+    return loss
+
+
+def make_masked_recon_loss(use_kernel: bool = False):
+    """``masked_recon_loss`` with a fused-kernel reconstruction path —
+    the lane-engine (``train_lanes``) variant of ``make_recon_loss``."""
+    if not use_kernel:
+        return masked_recon_loss
+
+    def loss(params: dict, batch: dict) -> jax.Array:
+        x, fm, rw = batch["x"], batch["mask"], batch["row_w"]
+        se = jnp.square(x - fused_reconstruct(params, x)) * fm
+        per_row = jnp.sum(se, axis=-1) / jnp.maximum(jnp.sum(fm), 1.0)
+        return jnp.sum(per_row * rw) / jnp.maximum(jnp.sum(rw), 1.0)
+
+    loss.cache_key = ("repro.core.autoencoder.make_masked_recon_loss", True)
+    return loss

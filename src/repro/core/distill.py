@@ -18,12 +18,14 @@ from repro.core import autoencoder as ae
 def distill_loss(params: dict, batch: dict, *, lam: float = 0.01,
                  kind: str = "mse", use_kernel: bool = False) -> jax.Array:
     x, z_t, mask = batch["x"], batch["z_teacher"], batch["aligned"]
-    z = ae.encode(params, x)
-    x_hat = ae.mlp_apply(params["dec"], z)
     if use_kernel:
         from repro.kernels import ops as kops
+        z = ae.fused_encode(params, x)
+        x_hat = ae.fused_mlp_apply(params["dec"], z)
         return kops.fused_distill_loss(x, x_hat, z, z_t, mask, lam=lam,
                                        kind=kind)
+    z = ae.encode(params, x)
+    x_hat = ae.mlp_apply(params["dec"], z)
     rec = jnp.mean(jnp.square(x - x_hat), axis=-1)               # (B,)
     diff = z - z_t
     if kind == "mae":
@@ -65,14 +67,16 @@ def make_lanes_loss(lam: float = 0.01, kind: str = "mse",
     def loss(params, batch):
         x, z_t, al = batch["x"], batch["z_teacher"], batch["aligned"]
         fm, rw = batch["mask"], batch["row_w"]
-        z = ae.encode(params, x)
-        x_hat = ae.mlp_apply(params["dec"], z)
         if use_kernel:
             from repro.kernels import ops as kops
+            z = ae.fused_encode(params, x)
+            x_hat = ae.fused_mlp_apply(params["dec"], z)
             s = jnp.sqrt(x.shape[-1] / jnp.maximum(jnp.sum(fm), 1.0))
             per_row = kops.fused_distill_rows(x * fm * s, x_hat * fm * s,
                                               z, z_t, al, lam=lam, kind=kind)
         else:
+            z = ae.encode(params, x)
+            x_hat = ae.mlp_apply(params["dec"], z)
             se = jnp.square(x - x_hat) * fm
             rec = jnp.sum(se, axis=-1) / jnp.maximum(jnp.sum(fm), 1.0)  # (B,)
             diff = z - z_t

@@ -162,10 +162,13 @@ def run_apcvfl_k(sc: VFLScenarioK, *, lam: float = HP.lam,
 
         # --- step 2 at the active party -------------------------------------
         zj = jnp.concatenate(blocks, axis=1).astype(jnp.float32)
-        r2 = training.train(
-            ae.init_autoencoder(keys[-2],
-                                ae.table3_encoder("g2", zj.shape[1])),
-            {"x": zj}, ae.recon_loss, seed=seed + 100, **train_kw)
+        # singleton lane: bit-identical twin of the replicated g2 stage
+        (r2,) = training.train_lanes(
+            [training.LaneSpec(
+                ae.init_autoencoder(keys[-2],
+                                    ae.table3_encoder("g2", zj.shape[1])),
+                {"x": zj}, seed + 100)],
+            ae.masked_recon_loss, **train_kw)
         epochs["g2"] = r2.epochs_run
         zt_al = ae.encode(r2.params, zj)
         m2 = zt_al.shape[1]

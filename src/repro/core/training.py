@@ -281,9 +281,10 @@ def _build_lanes_fit_engine(loss_fn: Callable, lr: float):
     opt = paper_adam(lr)
 
     @partial(jax.jit, static_argnames=("n_batches", "batch_size",
-                                       "max_epochs", "patience"))
+                                       "max_epochs", "patience", "uniform"))
     def run_fit_k(params, opt_state, base_keys, tr, val, n_tr, nb, live0, *,
-                  n_batches, batch_size, max_epochs, patience):
+                  n_batches, batch_size, max_epochs, patience,
+                  uniform=False):
         L = base_keys.shape[0]
 
         def lane_epoch(p, s, key, live_p, tr_p, val_p, n_tr_p, nb_p):
@@ -304,6 +305,12 @@ def _build_lanes_fit_engine(loss_fn: Callable, lr: float):
                 batch["row_w"] = jnp.ones((batch_size,), jnp.float32)
                 loss, grads = jax.value_and_grad(loss_fn)(p_, batch)
                 p2, s2, _ = opt.update(grads, s_, p_)
+                if uniform:
+                    # every live lane runs every step (nb_p == n_batches for
+                    # all lanes — caller-checked), so the freeze collapses
+                    # to ONE live-select per epoch below instead of a
+                    # params+opt tree select per step
+                    return (p2, s2), loss
                 # freeze past this lane's own step budget or after its
                 # early stop — the masked-select twin of distill.make_loss
                 on = live_p & (i < nb_p)
@@ -312,9 +319,17 @@ def _build_lanes_fit_engine(loss_fn: Callable, lr: float):
                          jax.tree.map(sel, s2, s_)),
                         jnp.where(on, loss, 0.0))
 
-            (p, s), losses = jax.lax.scan(step, (p, s),
-                                          (jnp.arange(n_batches, dtype=jnp.int32), idx))
-            tl = jnp.sum(losses) / jnp.maximum(nb_p, 1)
+            (p2, s2), losses = jax.lax.scan(step, (p, s),
+                                            (jnp.arange(n_batches, dtype=jnp.int32), idx))
+            if uniform:
+                sel = lambda a, b: jnp.where(live_p, a, b)
+                p = jax.tree.map(sel, p2, p)
+                s = jax.tree.map(sel, s2, s)
+                tl = jnp.where(live_p,
+                               jnp.sum(losses) / jnp.maximum(nb_p, 1), 0.0)
+            else:
+                p, s = p2, s2
+                tl = jnp.sum(losses) / jnp.maximum(nb_p, 1)
             return p, s, tl, loss_fn(p, val_p)
 
         def live_epoch(carry, epoch):
@@ -607,21 +622,53 @@ def _strip_lane_params(specs, best_params, shapes):
     return out
 
 
+def _lane_groups(specs: Sequence[LaneSpec]):
+    """Partition lane indices by (data shapes, param shapes) signature.
+    Lanes in one group pad-stack with ZERO padding waste — mixed-shape
+    fleets (e.g. one active + K passive parties) otherwise pay the max
+    shape for every lane (the Table-3 active g1 is ~7x smaller than the
+    passive g1 it was padded to)."""
+    groups: dict = {}
+    order = []
+    for i, sp in enumerate(specs):
+        dsig = tuple(sorted((k, tuple(np.shape(v)))
+                            for k, v in sp.data.items()))
+        psig = (jax.tree.structure(sp.params),
+                tuple(tuple(np.shape(l))
+                      for l in jax.tree.leaves(sp.params)))
+        key = (dsig, psig)
+        if key not in groups:
+            groups[key] = []
+            order.append(key)
+        groups[key].append(i)
+    return [groups[k] for k in order]
+
+
 def train_lanes(specs: Sequence[LaneSpec], loss_fn: Callable, *,
                 batch_size: int = 128, max_epochs: int = 200,
                 patience: int = 10, lr: float = 1e-3,
                 val_frac: float = 0.1, mesh=None,
                 shard_rows: bool = False) -> List[TrainResult]:
     """Train L independent lanes as one vmapped scan-of-scans — one upload,
-    one compile, ONE host sync per fit for all lanes (module docstring:
-    padded-stack layout, per-lane early-stop mask, mesh sharding).
+    one compile per shape group, ONE host sync per fit for all lanes
+    (module docstring: padded-stack layout, per-lane early-stop mask, mesh
+    sharding).
+
+    Lanes are partitioned into shape groups (``_lane_groups``) so
+    mixed-shape fleets never pad small lanes up to the largest party;
+    the global batch-size clamp (min over ALL lanes' train rows) is
+    computed before grouping, so every lane draws the same mini-batches
+    as the ungrouped engine — parity is exact, only padding FLOPs are
+    removed.  Groups whose lanes all share one step budget additionally
+    run the ``uniform`` engine fast path (epoch-level live select instead
+    of a per-step params+opt tree select).
 
     Every lane's ``data`` must carry its feature array under the ``"x"``
     key — the engine sizes rows and the real-feature ``mask`` from it; any
     other row-aligned keys are padded too but only ``"x"`` is masked.
-    When lane shapes differ (padding present) ``loss_fn`` must consume the
-    ``mask`` (real-feature columns) and ``row_w`` (real-row weights)
-    entries the engine adds to every batch — use
+    When lane shapes differ within a group (padding present) ``loss_fn``
+    must consume the ``mask`` (real-feature columns) and ``row_w``
+    (real-row weights) entries the engine adds to every batch — use
     ``autoencoder.masked_recon_loss`` for reconstruction workloads; lanes
     of identical shape (seed replicas) may use any plain loss, the extra
     keys are inert.
@@ -635,34 +682,52 @@ def train_lanes(specs: Sequence[LaneSpec], loss_fn: Callable, *,
     Returns one ``TrainResult`` per lane with padding stripped from the
     best-val params and histories truncated at that lane's stop epoch."""
     K = len(specs)
-    (params, opt_state, base_keys, tr, val, n_tr, nb, bs,
-     shapes) = _prep_lanes(specs, batch_size=batch_size, val_frac=val_frac,
-                           lr=lr)
-    n_batches = int(nb.max())
-    nb_dev = jnp.asarray(nb, jnp.int32)
-    n_tr_dev = jnp.asarray(n_tr, jnp.int32)
-    live0 = jnp.ones((K,), bool)
-    if mesh is not None:
-        (params, opt_state, base_keys, tr, val, n_tr_dev, nb_dev,
-         live0) = _shard_lanes(mesh, params, opt_state, base_keys, tr, val,
-                               n_tr_dev, nb_dev, live0,
-                               shard_rows=shard_rows)
+    # global batch-size clamp (the ungrouped engine's bs): computed over
+    # ALL lanes so per-group _prep_lanes clamps to exactly this value
+    # (global min <= every group min)
+    n_tr_all = []
+    for sp in specs:
+        n = len(next(iter(sp.data.values())))
+        n_tr_all.append(n - max(int(n * val_frac), 1))
+    global_bs = max(min(batch_size, min(n_tr_all)), 1)
 
     engine = get_lanes_fit_engine(loss_fn, lr=lr)
-    best_params, epochs, tls, vls = engine(
-        params, opt_state, base_keys, tr, val, n_tr_dev, nb_dev, live0,
-        n_batches=n_batches, batch_size=bs, max_epochs=max_epochs,
-        patience=patience)
-    # the single host sync of the fit (dead padding lanes sliced away)
-    epochs, tls, vls = jax.device_get((epochs, tls, vls))
+    launched = []                 # (idxs, gspecs, best_params, shapes, nb)
+    host_parts = []               # (epochs, tls, vls) per group, in-flight
+    for idxs in _lane_groups(specs):
+        gspecs = [specs[i] for i in idxs]
+        (params, opt_state, base_keys, tr, val, n_tr, nb, bs,
+         shapes) = _prep_lanes(gspecs, batch_size=global_bs,
+                               val_frac=val_frac, lr=lr)
+        n_batches = int(nb.max())
+        uniform = bool((nb == nb[0]).all())
+        nb_dev = jnp.asarray(nb, jnp.int32)
+        n_tr_dev = jnp.asarray(n_tr, jnp.int32)
+        live0 = jnp.ones((len(idxs),), bool)
+        if mesh is not None:
+            (params, opt_state, base_keys, tr, val, n_tr_dev, nb_dev,
+             live0) = _shard_lanes(mesh, params, opt_state, base_keys, tr,
+                                   val, n_tr_dev, nb_dev, live0,
+                                   shard_rows=shard_rows)
+        best_params, epochs, tls, vls = engine(
+            params, opt_state, base_keys, tr, val, n_tr_dev, nb_dev, live0,
+            n_batches=n_batches, batch_size=bs, max_epochs=max_epochs,
+            patience=patience, uniform=uniform)
+        launched.append((idxs, gspecs, best_params, shapes, nb))
+        host_parts.append((epochs, tls, vls))
+    # the single host sync of the fit, coalesced over every shape group
+    # (dead padding lanes sliced away)
+    host_parts = jax.device_get(host_parts)
 
-    stripped = _strip_lane_params(specs, best_params, shapes)
-    results = []
-    for i in range(K):
-        e = int(epochs[i])
-        results.append(TrainResult(stripped[i], e, e * int(nb[i]),
-                                   [float(t) for t in tls[:e, i]],
-                                   [float(v) for v in vls[:e, i]]))
+    results: List[TrainResult] = [None] * K  # type: ignore[list-item]
+    for (idxs, gspecs, best_params, shapes, nb), (epochs, tls, vls) in zip(
+            launched, host_parts):
+        stripped = _strip_lane_params(gspecs, best_params, shapes)
+        for j, i in enumerate(idxs):
+            e = int(epochs[j])
+            results[i] = TrainResult(stripped[j], e, e * int(nb[j]),
+                                     [float(t) for t in tls[:e, j]],
+                                     [float(v) for v in vls[:e, j]])
     return results
 
 
@@ -672,7 +737,29 @@ def train_lanes_epochwise(specs: Sequence[LaneSpec], loss_fn: Callable, *,
                           val_frac: float = 0.1) -> List[TrainResult]:
     """The pre-fusion lane loop: one vmapped epoch per dispatch, one host
     sync per epoch for the early-stop bookkeeping.  Kept as the fused lane
-    engine's live parity oracle (``tests/test_training_engine.py``)."""
+    engine's live parity oracle (``tests/test_training_engine.py``) —
+    it shape-groups lanes exactly like ``train_lanes`` (same global
+    batch-size clamp, same per-group padding) so the two paths draw
+    identical device permutations."""
+    n_tr_all = []
+    for sp in specs:
+        n = len(next(iter(sp.data.values())))
+        n_tr_all.append(n - max(int(n * val_frac), 1))
+    global_bs = max(min(batch_size, min(n_tr_all)), 1)
+
+    results: List[TrainResult] = [None] * len(specs)  # type: ignore
+    for idxs in _lane_groups(specs):
+        gspecs = [specs[i] for i in idxs]
+        for i, r in zip(idxs, _train_lanes_epochwise_group(
+                gspecs, loss_fn, batch_size=global_bs,
+                max_epochs=max_epochs, patience=patience, lr=lr,
+                val_frac=val_frac)):
+            results[i] = r
+    return results
+
+
+def _train_lanes_epochwise_group(specs, loss_fn, *, batch_size, max_epochs,
+                                 patience, lr, val_frac):
     K = len(specs)
     (params, opt_state, base_keys, tr, val, n_tr, nb, bs,
      shapes) = _prep_lanes(specs, batch_size=batch_size, val_frac=val_frac,

@@ -42,6 +42,42 @@ def fused_distill_loss(x, x_hat, z, z_t, mask, *, lam: float = 0.01,
                                        kind=kind))
 
 
+def fused_mlp2(x, w0, b0, w1, b1, *, final_act: bool = False,
+               block_b: int = 128):
+    """Fused 2-layer SELU MLP step (differentiable; closed-form custom
+    VJP).  Lane axis enters the kernel grid via ``jax.vmap``."""
+    from repro.kernels import lane_mlp as _lm
+    return _lm.fused_mlp2(x, w0, b0, w1, b1, final_act=final_act,
+                          block_b=block_b, interpret=INTERPRET)
+
+
+def fused_lane_mlp2(xs, w0s, b0s, w1s, b1s, live, *,
+                    final_act: bool = False, block_b: int = 128):
+    """Explicit lane-stacked fused MLP: (L, B, din) on a lane-major grid;
+    dead lanes (live=0) produce exact zeros."""
+    from repro.kernels import lane_mlp as _lm
+    return _lm.fused_lane_mlp2(xs, w0s, b0s, w1s, b1s, live,
+                               final_act=final_act, block_b=block_b,
+                               interpret=INTERPRET)
+
+
+def probe_grad_step(w, b, x, y, rw, *, l2: float = 1e-4,
+                    block_b: int = 128):
+    """Fused weighted softmax-CE probe step: (loss, dW, db) in one pass."""
+    from repro.kernels import probe as _pr
+    return _pr.probe_grad_step(w, b, x, y, rw, l2=l2, block_b=block_b,
+                               interpret=INTERPRET)
+
+
+def int8_matmul(x, w_q, scale, b, *, act: str = "none",
+                block_b: int = 128):
+    """Weight-only int8 matmul with fused per-channel dequant (+ optional
+    fused SELU) — the quantized serving path's GEMM."""
+    from repro.kernels import int8_matmul as _i8
+    return _i8.int8_matmul(x, w_q, scale, b, act=act, block_b=block_b,
+                           interpret=INTERPRET)
+
+
 def decode_attention(q, k, v, slot_pos, pos, *, window: int = 0,
                      block_w: int = 512):
     """One-token cache attention. q: (B, H, hd); k/v: (B, W, H, hd) with kv

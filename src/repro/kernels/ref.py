@@ -40,6 +40,33 @@ def fused_distill_loss_ref(x, x_hat, z, z_t, mask, *, lam: float = 0.01,
     return jnp.mean(rec + lam * dis * mask.astype(jnp.float32))
 
 
+def mlp2_ref(x, w0, b0, w1, b1, *, final_act: bool = False):
+    """2-layer SELU MLP oracle for ``kernels.lane_mlp.fused_mlp2`` —
+    exactly ``core.autoencoder.mlp_apply`` on a {w0,b0,w1,b1} dict."""
+    h = jax.nn.selu(x @ w0 + b0)
+    out = h @ w1 + b1
+    return jax.nn.selu(out) if final_act else out
+
+
+def probe_grad_ref(w, b, x, y, rw, *, l2: float = 1e-4):
+    """Closed-form gradient oracle for the weighted softmax-CE probe
+    (``classifier._weighted_logreg_loss``): returns (loss, dW, db)."""
+    logits = x @ w + b
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
+    denom = jnp.maximum(jnp.sum(rw), 1.0)
+    loss = jnp.sum((lse - gold) * rw) / denom + l2 * jnp.sum(jnp.square(w))
+    p = jax.nn.softmax(logits, axis=-1)
+    onehot = jax.nn.one_hot(y, w.shape[1], dtype=p.dtype)
+    g = (p - onehot) * (rw / denom)[:, None]
+    return loss, x.T @ g + 2.0 * l2 * w, jnp.sum(g, axis=0)
+
+
+def int8_matmul_ref(x, w_q, scale, b):
+    """Weight-only int8 oracle: dequantize per output channel, matmul."""
+    return x @ (w_q.astype(jnp.float32) * scale[None, :]) + b
+
+
 def ssd_chunk_ref(x, dt, A, Bm, Cm):
     """Sequential (step-by-step) SSD oracle.
     x: (B,S,H,P), dt: (B,S,H), A: (H,), Bm/Cm: (B,S,G,N) with G dividing H.

@@ -56,6 +56,10 @@ def main(argv=None) -> int:
                     help="probability a request row keeps its real id "
                          "(cache candidate)")
     ap.add_argument("--buckets", default="16,32,64,128,256")
+    ap.add_argument("--quantize", choices=["none", "int8"], default="none",
+                    help="'int8' serves the active path from per-channel "
+                         "symmetric int8 weights (serve.quant) and prints "
+                         "the pinned fp32-parity report")
     ap.add_argument("--arrival", choices=["stream", "poisson", "bursty"],
                     default="stream",
                     help="'stream' = drain the request list as a backlog "
@@ -136,10 +140,20 @@ def main(argv=None) -> int:
         bundle = reloaded
 
     buckets = [int(b) for b in args.buckets.split(",") if b]
+    quantize = None if args.quantize == "none" else args.quantize
+    if quantize:
+        from repro.serve import quant
+        parity = quant.parity_report(bundle, sc.active.x, sc.active.y,
+                                     n_classes=sc.n_classes)
+        print(f"int8 parity vs fp32: max|dlogit|="
+              f"{parity['max_abs_logit_delta']:.4f} "
+              f"(rel {parity['rel_logit_delta']:.4f}), flip rate "
+              f"{parity['pred_flip_rate']:.4f}, "
+              f"{parity['compression']}x weight compression")
     if args.arrival != "stream":
         from repro.serve import runtime as rt
         registry = rt.TenantRegistry(buckets=buckets)
-        engine = registry.register("default", bundle)
+        engine = registry.register("default", bundle, quantize=quantize)
         engine.warmup()
         stream = rt.make_timed_stream(
             sc.active.x, sc.active.ids, args.requests,
@@ -168,7 +182,8 @@ def main(argv=None) -> int:
         print(f"compiled batch shapes: {stats['compiled']['by_path']} "
               f"(distinct: {stats['compiled']['distinct_batch_shapes']})")
     else:
-        engine = sv.VFLServingEngine(bundle, buckets=buckets)
+        engine = sv.VFLServingEngine(bundle, buckets=buckets,
+                                     quantize=quantize)
         requests = sv.make_request_stream(
             sc.active.x, sc.active.ids, args.requests, seed=args.seed + 1,
             max_rows=args.max_rows, p_known=args.p_known)
@@ -185,6 +200,8 @@ def main(argv=None) -> int:
               f"dispatches: {stats['dispatches']}")
         print(f"compiled batch shapes: {stats['compiled']['by_path']} "
               f"(distinct: {stats['compiled']['distinct_batch_shapes']})")
+    if quantize:
+        stats["quant"] = parity
     if args.out:
         with open(args.out, "w") as fh:
             json.dump(stats, fh, indent=1)

@@ -1,0 +1,193 @@
+"""Int8-quantized serving for the active-only path ``head(g3(x))``.
+
+The paper's headline deployment mode is the active party predicting alone
+from its distilled student — a 2-layer Table-3 encoder plus a logreg
+head.  At serving scale those weights dominate the memory traffic, so
+this module gives the ``ModelBundle`` an int8 export:
+
+* **per-channel symmetric quantization** — each weight matrix ``w`` is
+  stored as ``w_q = round(w / scale)`` in int8 with one fp32 ``scale``
+  per OUTPUT channel (``scale[c] = max|w[:, c]| / 127``).  Symmetric
+  (no zero point) keeps dequant a single multiply; per-channel keeps the
+  quantization error of a wide column from leaking into narrow ones.
+  Biases and the feature scaler stay fp32 (they are O(channels), not
+  O(d x channels)).
+
+* **fused int8 kernel path** — ``int8_active_apply`` runs the whole
+  quantized predict through ``kernels.int8_matmul``: the dequant happens
+  inside the matmul tile (weights cross memory at 1 byte/param) and the
+  hidden-layer SELU is fused into the first launch.
+
+* **CPU fast path** — on hosts where Pallas runs interpreted (this
+  container), ``dequantized_active_params`` pre-dequantizes ONCE at
+  engine init into the exact pytree ``vfl._active_apply`` consumes, so
+  ``VFLServingEngine(..., quantize="int8")`` shares the fp32 engine's
+  jitted executables (same shapes -> same jit cache) and its throughput:
+  the quantization error is paid, the interpret-mode overhead is not.
+
+The parity cost is PINNED, not hoped for: ``parity_report`` measures the
+max logit delta, prediction flip rate and F1 delta of the quantized path
+against fp32 on real rows; ``tests/test_serve_quant.py`` asserts the
+bounds and ``benchmarks/servebench.py`` records them in
+``BENCH_serve.json``.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+# pinned int8-vs-fp32 agreement bounds.  The Table-3 serving stack is 3
+# matmuls deep and 7-bit weights carry ~0.4% per-layer relative error;
+# measured on bcw bundles across seeds 0-2 at 2/15/30 training epochs the
+# worst logit delta is 0.41 absolute / 5.9% of the logit range, F1-macro
+# delta <= 0.020 and flip rate <= 5.3% (under-trained 2-epoch smoke
+# bundles are the worst case — their logits sit near the decision
+# boundary).  The bounds below give ~2x headroom over those
+# measurements; tests, servebench and loadbench assert them.
+MAX_LOGIT_DELTA = 0.8
+MAX_REL_LOGIT_DELTA = 0.12
+MAX_F1_DELTA = 0.04
+
+
+def quantize_weight(w) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-output-channel symmetric int8: (w_q int8 (d, c), scale (c,)).
+
+    All-zero columns get scale 1.0 (they dequantize back to exact zeros
+    rather than dividing by zero)."""
+    w = np.asarray(w, np.float32)
+    if w.ndim != 2:
+        raise ValueError(f"quantize_weight: expected a 2-D weight, "
+                         f"got shape {w.shape}")
+    scale = np.abs(w).max(axis=0) / 127.0
+    scale = np.where(scale > 0, scale, 1.0).astype(np.float32)
+    w_q = np.clip(np.round(w / scale[None, :]), -127, 127).astype(np.int8)
+    return w_q, scale
+
+
+def dequantize_weight(w_q, scale) -> np.ndarray:
+    # host-side numpy on purpose: this runs at engine init, and jax ops
+    # here would cost one-time convert/multiply XLA compiles that break
+    # the registry's zero-compile int8-twin promise
+    return (np.asarray(w_q).astype(np.float32)
+            * np.asarray(scale, np.float32)[None, :])
+
+
+def _enc_layers(g3: dict) -> dict:
+    enc = g3["enc"] if "enc" in g3 else g3
+    n = len([k for k in enc if k.startswith("w")])
+    if n != 2:
+        raise ValueError(f"int8 serving supports the 2-layer Table-3 "
+                         f"student; this g3 encoder has {n} layers")
+    return enc
+
+
+def quantize_active_path(bundle) -> Dict:
+    """Quantize the active-only serving params (g3 encoder + head) of a
+    ``ModelBundle`` into a flat dict of int8 weights + fp32 scales/biases,
+    with the feature scaler carried along.  The decoder and the
+    collaborative-path params are not serving-path weights and are left
+    out entirely."""
+    enc = _enc_layers(bundle.g3)
+    w0_q, w0_s = quantize_weight(enc["w0"])
+    w1_q, w1_s = quantize_weight(enc["w1"])
+    hw_q, hw_s = quantize_weight(bundle.head_active["w"])
+    scale = np.asarray(bundle.x_scale, np.float32)
+    fp32_bytes = sum(int(np.asarray(v).size) * 4
+                     for v in (enc["w0"], enc["w1"],
+                               bundle.head_active["w"]))
+    int8_bytes = w0_q.size + w1_q.size + hw_q.size \
+        + 4 * (w0_s.size + w1_s.size + hw_s.size)
+    return {
+        "w0_q": jnp.asarray(w0_q), "w0_scale": jnp.asarray(w0_s),
+        "b0": jnp.asarray(enc["b0"], jnp.float32),
+        "w1_q": jnp.asarray(w1_q), "w1_scale": jnp.asarray(w1_s),
+        "b1": jnp.asarray(enc["b1"], jnp.float32),
+        "head_w_q": jnp.asarray(hw_q), "head_w_scale": jnp.asarray(hw_s),
+        "head_b": jnp.asarray(bundle.head_active["b"], jnp.float32),
+        "mean": jnp.asarray(bundle.x_mean, jnp.float32),
+        "inv_scale": jnp.asarray(1.0 / scale, jnp.float32),
+        "meta": {"scheme": "int8-symmetric-per-channel",
+                 "weight_bytes_fp32": fp32_bytes,
+                 "weight_bytes_int8": int(int8_bytes),
+                 "compression": round(fp32_bytes / int8_bytes, 2)},
+    }
+
+
+def int8_active_apply(qp: Dict, x):
+    """The quantized ``head(g3(x))`` through the fused int8 kernels:
+    standardize -> int8 matmul + fused SELU -> int8 matmul (linear
+    latent) -> int8 head matmul.  Weights cross memory as int8; dequant
+    happens in-tile (``kernels.int8_matmul``)."""
+    from repro.kernels import ops as kops
+    x = (x - qp["mean"]) * qp["inv_scale"]
+    h = kops.int8_matmul(x, qp["w0_q"], qp["w0_scale"], qp["b0"],
+                         act="selu")
+    z = kops.int8_matmul(h, qp["w1_q"], qp["w1_scale"], qp["b1"])
+    return kops.int8_matmul(z, qp["head_w_q"], qp["head_w_scale"],
+                            qp["head_b"])
+
+
+def dequantized_active_params(qp: Dict) -> Dict:
+    """Pre-dequantize a quantized active path back into the pytree
+    ``vfl._active_apply`` consumes ({g3: {enc}, head, mean, inv_scale}).
+    Same shapes as the fp32 path -> the engine's shared jit cache serves
+    it with zero extra compiles; predictions equal the int8 kernel path
+    (both compute ``x @ (w_q * scale) + b`` in fp32)."""
+    return {
+        "g3": {"enc": {
+            "w0": jnp.asarray(dequantize_weight(qp["w0_q"], qp["w0_scale"])),
+            "b0": qp["b0"],
+            "w1": jnp.asarray(dequantize_weight(qp["w1_q"], qp["w1_scale"])),
+            "b1": qp["b1"],
+        }},
+        "head": {"w": jnp.asarray(dequantize_weight(qp["head_w_q"],
+                                                    qp["head_w_scale"])),
+                 "b": qp["head_b"]},
+        "mean": qp["mean"], "inv_scale": qp["inv_scale"],
+    }
+
+
+def parity_report(bundle, x, y: Optional[np.ndarray] = None,
+                  *, n_classes: Optional[int] = None) -> Dict:
+    """Measure the int8-vs-fp32 serving gap on real feature rows: max /
+    mean absolute logit delta, prediction flip rate, and (when labels are
+    given) the F1/accuracy delta.  This is the number the tests pin and
+    the benchmarks record — the quantized path ships WITH its error bar."""
+    from repro.core import classifier as clf
+    from repro.serve.vfl import VFLServingEngine
+
+    x = np.asarray(x, np.float32)
+    fp32 = VFLServingEngine(bundle)
+    q = VFLServingEngine(bundle, quantize="int8")
+    lf = fp32.predict_active(x)
+    lq = q.predict_active(x)
+    pf = np.argmax(lf, axis=-1)
+    pq = np.argmax(lq, axis=-1)
+    d = np.abs(lf - lq)
+    logit_range = max(float(np.abs(lf).max()), 1e-9)
+    report = {
+        "scheme": q.quant_meta["scheme"],
+        "compression": q.quant_meta["compression"],
+        "rows": int(len(x)),
+        "max_abs_logit_delta": float(d.max()),
+        "mean_abs_logit_delta": float(d.mean()),
+        "rel_logit_delta": float(d.max() / logit_range),
+        "pred_flip_rate": float(np.mean(pf != pq)),
+        "max_logit_delta_bound": MAX_LOGIT_DELTA,
+        "rel_logit_delta_bound": MAX_REL_LOGIT_DELTA,
+    }
+    if y is not None:
+        y = np.asarray(y)
+        nc = int(n_classes if n_classes is not None else y.max() + 1)
+        mf = clf.f1_scores(y, pf, nc)
+        mq = clf.f1_scores(y, pq, nc)
+        report.update({
+            "f1_macro_fp32": mf["f1_macro"], "f1_macro_int8": mq["f1_macro"],
+            "f1_macro_delta": abs(mf["f1_macro"] - mq["f1_macro"]),
+            "accuracy_fp32": mf["accuracy"], "accuracy_int8": mq["accuracy"],
+            "accuracy_delta": abs(mf["accuracy"] - mq["accuracy"]),
+            "max_f1_delta_bound": MAX_F1_DELTA,
+        })
+    return report

@@ -197,12 +197,17 @@ class TenantRegistry:
                         jax.jit(sv._collab_apply))
         self.engines: Dict[str, sv.VFLServingEngine] = {}
 
-    def register(self, name: str, bundle: sv.ModelBundle
-                 ) -> sv.VFLServingEngine:
+    def register(self, name: str, bundle: sv.ModelBundle, *,
+                 quantize: Optional[str] = None) -> sv.VFLServingEngine:
+        """``quantize="int8"`` registers the tenant on the quantized
+        serving path (``serve.quant``); its pre-dequantized params keep
+        the fp32 pytree shape, so it shares the registry's jit cache —
+        mixing fp32 and int8 tenants costs zero extra compiles."""
         if name in self.engines:
             raise ValueError(f"tenant {name!r} already registered")
         engine = sv.VFLServingEngine(bundle, bucketer=self.bucketer,
-                                     jit_fns=self._jit_fns)
+                                     jit_fns=self._jit_fns,
+                                     quantize=quantize)
         self.engines[name] = engine
         return engine
 
@@ -489,7 +494,11 @@ def verify_dispatch_parity(runtime: ServingRuntime,
     out = {}
     buckets = runtime.registry.bucketer.buckets
     for tenant, bundle in bundles.items():
-        solo = sv.VFLServingEngine(bundle, buckets=buckets)
+        # the solo engine must mirror the tenant's quantization mode —
+        # an int8 tenant's dedicated-serving twin is also int8
+        q = runtime.registry[tenant].quantize \
+            if tenant in runtime.registry else None
+        solo = sv.VFLServingEngine(bundle, buckets=buckets, quantize=q)
         identical = True
         max_abs = 0.0
         batches = 0

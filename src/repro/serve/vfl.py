@@ -347,12 +347,22 @@ class VFLServingEngine:
     def __init__(self, bundle: ModelBundle, *,
                  buckets: Sequence[int] = DEFAULT_BUCKETS,
                  bucketer: Optional[BatchBucketer] = None,
-                 jit_fns: Optional[Tuple] = None):
+                 jit_fns: Optional[Tuple] = None,
+                 quantize: Optional[str] = None):
         """``bucketer``/``jit_fns`` inject SHARED infrastructure (one
         bucketer + one pair of jitted apply functions across many
         tenants' engines — see ``runtime.TenantRegistry``); by default
         each engine owns a private pair, which compiles to the same
-        executables (same pure functions, same shapes)."""
+        executables (same pure functions, same shapes).
+
+        ``quantize="int8"`` serves the active path from per-channel
+        symmetric int8 weights (``serve.quant``).  On this interpret-mode
+        host the engine pre-dequantizes ONCE at init into the fp32
+        pytree shape, so the quantized tenant rides the SAME jitted
+        executables (and throughput) as fp32 — only the quantization
+        error differs, and ``serve.quant.parity_report`` pins it.  The
+        fused int8 kernel path stays available as
+        ``quant.int8_active_apply(engine.quant_params, x)``."""
         self.bundle = bundle
         self.bucketer = bucketer if bucketer is not None \
             else BatchBucketer(buckets)
@@ -366,9 +376,29 @@ class VFLServingEngine:
                              "to 1 before export)")
         self._mean = jnp.asarray(bundle.x_mean, jnp.float32)
         self._inv_scale = 1.0 / jnp.asarray(scale)
-        self._head = dev(bundle.head_active)
-        self._p_active = {"g3": dev(bundle.g3), "head": self._head,
-                          "mean": self._mean, "inv_scale": self._inv_scale}
+        if quantize not in (None, "int8"):
+            raise ValueError(f"quantize must be None or 'int8', "
+                             f"got {quantize!r}")
+        self.quantize = quantize
+        self.quant_params = None
+        self.quant_meta = None
+        if quantize == "int8":
+            from repro.serve import quant
+            self.quant_params = quant.quantize_active_path(bundle)
+            self.quant_meta = self.quant_params["meta"]
+            self._p_active = quant.dequantized_active_params(
+                self.quant_params)
+            if "dec" in bundle.g3:
+                # keep the pytree structure identical to the fp32 path
+                # (decoder rides along untouched, unused by serving) so
+                # the shared jit cache reuses the fp32 executables
+                self._p_active["g3"]["dec"] = dev(bundle.g3["dec"])
+            self._head = self._p_active["head"]
+        else:
+            self._head = dev(bundle.head_active)
+            self._p_active = {"g3": dev(bundle.g3), "head": self._head,
+                              "mean": self._mean,
+                              "inv_scale": self._inv_scale}
         if jit_fns is not None:
             self._active_fn, shared_collab = jit_fns
         else:

@@ -8,8 +8,10 @@ import pytest
 from repro.kernels import ops
 from repro.kernels.distill_loss import fused_distill_rows
 from repro.kernels.flash_attention import flash_attention
+from repro.kernels.lane_mlp import fused_lane_mlp2, fused_mlp2
+from repro.kernels.probe import probe_grad_step
 from repro.kernels.ref import (flash_attention_ref, fused_distill_loss_ref,
-                               ssd_chunk_ref)
+                               mlp2_ref, probe_grad_ref, ssd_chunk_ref)
 
 
 @pytest.mark.parametrize("S,hd,bq,bk", [
@@ -226,6 +228,176 @@ def test_ssd_kernel_composes_full_scan():
     y = (y_i + y_x).reshape(B_, S, H, P)
     np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
                                atol=1e-3, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# lane-blocked fused 2-layer MLP (kernels.lane_mlp)
+# ---------------------------------------------------------------------------
+
+def _mlp2_inputs(key, B, din, dh, dout):
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (B, din))
+    w0 = jax.random.normal(ks[1], (din, dh)) / np.sqrt(din)
+    b0 = jax.random.normal(ks[2], (dh,)) * 0.1
+    w1 = jax.random.normal(ks[3], (dh, dout)) / np.sqrt(dh)
+    b1 = jax.random.normal(ks[4], (dout,)) * 0.1
+    return x, w0, b0, w1, b1
+
+
+@pytest.mark.parametrize("B,din,dh,dout,bb", [
+    (128, 6, 8, 4, 64),       # rows divide the block
+    (200, 30, 64, 128, 128),  # padding path (200 -> 256)
+    (96, 5, 64, 128, 128),    # B < block_b (single padded tile)
+])
+@pytest.mark.parametrize("final_act", [False, True])
+def test_fused_mlp2_sweep(B, din, dh, dout, bb, final_act):
+    args = _mlp2_inputs(jax.random.PRNGKey(B + din), B, din, dh, dout)
+    out = fused_mlp2(*args, final_act=final_act, block_b=bb, interpret=True)
+    ref = mlp2_ref(*args, final_act=final_act)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("final_act", [False, True])
+def test_fused_mlp2_grads_match_autodiff(final_act):
+    """The closed-form VJP (module docstring chain rule) must match
+    autodiff through the jnp oracle w.r.t. every input — this is the
+    exactness the lane engine's value_and_grad training relies on."""
+    args = _mlp2_inputs(jax.random.PRNGKey(21), 200, 10, 16, 8)
+
+    def fused(*a):
+        return jnp.mean(jnp.square(fused_mlp2(*a, final_act=final_act,
+                                              block_b=64, interpret=True)))
+
+    def oracle(*a):
+        return jnp.mean(jnp.square(mlp2_ref(*a, final_act=final_act)))
+
+    got = jax.grad(fused, argnums=(0, 1, 2, 3, 4))(*args)
+    want = jax.grad(oracle, argnums=(0, 1, 2, 3, 4))(*args)
+    for g, w, name in zip(got, want, ("x", "w0", "b0", "w1", "b1")):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), atol=1e-6,
+                                   rtol=1e-5, err_msg=name)
+
+
+def test_fused_lane_mlp2_dead_lanes_exact_zero():
+    """Stacked-lane form: the vmap-prepended lane grid must reproduce each
+    live lane's per-lane result and render dead (live=0) lanes as exact
+    zeros — the invariant the lane-padded engine depends on."""
+    key = jax.random.PRNGKey(4)
+    L, B, din, dh, dout = 4, 96, 6, 8, 4
+    per_lane = [_mlp2_inputs(k, B, din, dh, dout)
+                for k in jax.random.split(key, L)]
+    xs, w0s, b0s, w1s, b1s = (jnp.stack(t) for t in zip(*per_lane))
+    live = jnp.asarray([1.0, 1.0, 0.0, 1.0])
+    out = fused_lane_mlp2(xs, w0s, b0s, w1s, b1s, live, block_b=64,
+                          interpret=True)
+    assert np.all(np.asarray(out[2]) == 0.0)
+    for i in (0, 1, 3):
+        np.testing.assert_allclose(np.asarray(out[i]),
+                                   np.asarray(mlp2_ref(*per_lane[i])),
+                                   atol=2e-5, rtol=2e-5)
+
+
+def test_lane_mlp_kernel_recon_loss_trains_under_value_and_grad():
+    """One value_and_grad step of the lane-engine loss with the fused
+    reconstruction path must agree with the jnp closure's gradients."""
+    from repro.core import autoencoder as ae
+    key = jax.random.PRNGKey(6)
+    params = ae.init_autoencoder(key, [12, 16, 8])
+    batch = {"x": jax.random.normal(key, (64, 12)),
+             "mask": jnp.ones((12,)),
+             "row_w": (jax.random.uniform(key, (64,)) > 0.3).astype(
+                 jnp.float32)}
+    vk, gk = jax.value_and_grad(ae.make_masked_recon_loss(True))(
+        params, batch)
+    vr, gr = jax.value_and_grad(ae.make_masked_recon_loss(False))(
+        params, batch)
+    assert abs(float(vk) - float(vr)) < 1e-6
+    for a, b in zip(jax.tree.leaves(gk), jax.tree.leaves(gr)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5,
+                                   rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# fused probe step (kernels.probe)
+# ---------------------------------------------------------------------------
+
+def _probe_inputs(key, n, d, c):
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (n, d))
+    w = jax.random.normal(ks[1], (d, c)) * 0.1
+    b = jax.random.normal(ks[2], (c,)) * 0.1
+    y = jax.random.randint(ks[3], (n,), 0, c)
+    rw = (jax.random.uniform(ks[4], (n,)) > 0.3).astype(jnp.float32)
+    return w, b, x, y, rw
+
+
+@pytest.mark.parametrize("n,d,c,bb", [
+    (128, 16, 2, 64),    # rows divide the block
+    (300, 33, 4, 128),   # padding path (300 -> 384)
+    (96, 8, 3, 128),     # n < block_b
+])
+def test_probe_grad_step_sweep(n, d, c, bb):
+    args = _probe_inputs(jax.random.PRNGKey(n + d), n, d, c)
+    got = probe_grad_step(*args, block_b=bb, interpret=True)
+    want = probe_grad_ref(*args)
+    for a, b, name in zip(got, want, ("loss", "dW", "db")):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5,
+                                   rtol=2e-5, err_msg=name)
+
+
+def test_probe_grad_step_vmapped_fold_lanes():
+    """k folds as vmap lanes (in_axes=(0, 0, None, None, 0), the
+    classifier's fold-blocked layout): each lane must equal its solo
+    reference — shared x/y, per-fold weights and row masks."""
+    key = jax.random.PRNGKey(12)
+    k, n, d, c = 5, 200, 16, 3
+    _, _, x, y, _ = _probe_inputs(key, n, d, c)
+    ks = jax.random.split(jax.random.PRNGKey(13), k)
+    ws = jnp.stack([jax.random.normal(kk, (d, c)) * 0.1 for kk in ks])
+    bs = jnp.stack([jax.random.normal(kk, (c,)) * 0.1 for kk in ks])
+    rws = jnp.stack([(jax.random.uniform(kk, (n,)) > 0.4).astype(
+        jnp.float32) for kk in ks])
+    got = jax.vmap(
+        lambda w, b, rw: probe_grad_step(w, b, x, y, rw, block_b=64,
+                                         interpret=True),
+        in_axes=(0, 0, 0))(ws, bs, rws)
+    for i in range(k):
+        want = probe_grad_ref(ws[i], bs[i], x, y, rws[i])
+        for a, b, name in zip((got[0][i], got[1][i], got[2][i]), want,
+                              ("loss", "dW", "db")):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=2e-5, rtol=2e-5,
+                                       err_msg=f"fold{i}/{name}")
+
+
+def test_probe_zero_weight_rows_exactly_inert():
+    """rw=0 rows (a fold's test rows / padding) must not influence the
+    step at all — corrupting their features changes nothing."""
+    key = jax.random.PRNGKey(9)
+    w, b, x, y, rw = _probe_inputs(key, 160, 12, 4)
+    dead = np.asarray(rw) == 0.0
+    x_bad = np.asarray(x).copy()
+    x_bad[dead] = 1e6
+    a = probe_grad_step(w, b, x, y, rw, interpret=True)
+    bb = probe_grad_step(w, b, jnp.asarray(x_bad), y, rw, interpret=True)
+    for u, v in zip(a, bb):
+        np.testing.assert_array_equal(np.asarray(u), np.asarray(v))
+
+
+def test_kfold_cv_kernel_path_matches_reference():
+    """classifier.kfold_cv(use_kernel=True) routes every fold's 300 Adam
+    steps through the fused probe kernel; the CV metrics must land within
+    float-accumulation distance of the jnp path."""
+    from repro.core import classifier as clf
+    rng = np.random.RandomState(0)
+    n, d, c = 120, 8, 2
+    x = rng.randn(n, d).astype(np.float32)
+    y = (x[:, 0] + 0.5 * rng.randn(n) > 0).astype(np.int64)
+    ref = clf.kfold_cv(x, y, c, k=5, seed=0, use_kernel=False)
+    ker = clf.kfold_cv(x, y, c, k=5, seed=0, use_kernel=True)
+    for key_ in ref:
+        assert abs(ref[key_] - ker[key_]) < 0.02, (key_, ref, ker)
 
 
 @pytest.mark.parametrize("W,hd,bw,window", [

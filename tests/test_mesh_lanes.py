@@ -108,6 +108,20 @@ def test_train_lanes_sharded_matches_unsharded():
 
 
 @pytest.mark.needs_devices(4)
+def test_train_lanes_kernel_path_mesh_parity():
+    """The fused lane-MLP kernel path (use_kernel=True; Pallas interpret
+    mode on CPU) must shard across a 4-device lane mesh with the same
+    parity as the jnp path: the vmap-prepended lane grid has to survive
+    shard_map partitioning, dead padded lanes included."""
+    kw = dict(batch_size=16, max_epochs=4, patience=3, lr=1e-3)
+    loss = ae.make_masked_recon_loss(use_kernel=True)
+    base = training.train_lanes(_uneven_lanes(), loss, **kw)
+    m = meshlib.make_lane_mesh(lane=4)
+    sharded = training.train_lanes(_uneven_lanes(), loss, mesh=m, **kw)
+    _assert_lane_results_match(base, sharded)
+
+
+@pytest.mark.needs_devices(4)
 @pytest.mark.parametrize("rows", [128, 130])
 def test_train_lanes_row_sharded_parity(rows):
     """lane=2 x data=2 with shard_rows: 128 rows divide the data axis,

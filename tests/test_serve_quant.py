@@ -1,0 +1,163 @@
+"""Int8-quantized serving tests (``repro.serve.quant``): per-channel
+symmetric quantization round-trip bounds, the fused int8 matmul kernel vs
+its jnp oracle, kernel-path vs pre-dequantized engine-path agreement, the
+PINNED fp32-vs-int8 parity bounds on a real trained bundle, and the
+shared-jit-cache promise (an int8 engine warms for free after fp32).
+
+One small model is trained once per module (2 epochs — quantization
+parity does not depend on convergence; under-trained bundles are in fact
+the worst case the bounds were measured against) and every test reuses it.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import guards
+from repro.core import pipeline
+from repro.experiments.specs import ScenarioSpec
+from repro.experiments.sweeps import build_scenario
+from repro.kernels.int8_matmul import int8_matmul
+from repro.kernels.ref import int8_matmul_ref
+from repro.serve import quant
+from repro.serve import vfl as sv
+
+
+@pytest.fixture(scope="module")
+def trained():
+    sc = build_scenario(ScenarioSpec(dataset="bcw", n_aligned=120,
+                                     n_active_features=5, seed=0))
+    result = pipeline.run_apcvfl(sc, seed=0, max_epochs=2)
+    bundle = sv.export_bundle(result, sc)
+    return sc, result, bundle
+
+
+# ---------------------------------------------------------------------------
+# quantize/dequantize round-trip
+# ---------------------------------------------------------------------------
+
+def test_quantize_weight_roundtrip_error_bound():
+    """Symmetric 7-bit rounding: per-element error <= scale[c]/2, with
+    the per-OUTPUT-channel scale (axis=0 max of |w|)."""
+    rng = np.random.RandomState(0)
+    w = (rng.randn(64, 16) * rng.rand(16)[None, :]).astype(np.float32)
+    w_q, scale = quant.quantize_weight(w)
+    assert w_q.dtype == np.int8 and scale.shape == (16,)
+    np.testing.assert_allclose(scale, np.abs(w).max(axis=0) / 127.0,
+                               rtol=1e-6)
+    err = np.abs(quant.dequantize_weight(w_q, scale) - w)
+    assert np.all(err <= scale[None, :] / 2 + 1e-7)
+
+
+def test_quantize_weight_zero_column_exact():
+    w = np.zeros((8, 3), np.float32)
+    w[:, 1] = np.linspace(-1, 1, 8)
+    w_q, scale = quant.quantize_weight(w)
+    assert scale[0] == 1.0 and scale[2] == 1.0   # no divide-by-zero
+    deq = quant.dequantize_weight(w_q, scale)
+    assert np.all(deq[:, 0] == 0.0) and np.all(deq[:, 2] == 0.0)
+
+
+def test_quantize_weight_rejects_non_2d():
+    with pytest.raises(ValueError, match="2-D"):
+        quant.quantize_weight(np.zeros((4,), np.float32))
+
+
+def test_enc_layers_rejects_deep_encoders():
+    enc = {f"w{i}": np.zeros((4, 4)) for i in range(3)}
+    enc.update({f"b{i}": np.zeros((4,)) for i in range(3)})
+    with pytest.raises(ValueError, match="2-layer"):
+        quant._enc_layers({"enc": enc})
+
+
+# ---------------------------------------------------------------------------
+# fused int8 matmul kernel vs oracle
+# ---------------------------------------------------------------------------
+
+def _int8_inputs(key, B, d, c):
+    ks = jax.random.split(key, 3)
+    x = jax.random.normal(ks[0], (B, d))
+    wf = jax.random.normal(ks[1], (d, c))
+    w_q, scale = quant.quantize_weight(np.asarray(wf))
+    b = jax.random.normal(ks[2], (c,)) * 0.1
+    return x, jnp.asarray(w_q), jnp.asarray(scale), b
+
+
+@pytest.mark.parametrize("B,d,c,bb", [
+    (128, 32, 8, 64),    # rows divide the block
+    (200, 64, 16, 128),  # padding path (200 -> 256)
+    (5, 30, 4, 128),     # tiny serve-shaped batch, B < block_b
+])
+@pytest.mark.parametrize("act", ["none", "selu"])
+def test_int8_matmul_kernel_vs_ref(B, d, c, bb, act):
+    x, w_q, scale, b = _int8_inputs(jax.random.PRNGKey(B + d), B, d, c)
+    out = int8_matmul(x, w_q, scale, b, act=act, block_b=bb,
+                      interpret=True)
+    ref = int8_matmul_ref(x, w_q, scale, b)
+    if act == "selu":
+        ref = jax.nn.selu(ref)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_int8_matmul_rejects_bad_inputs():
+    x, w_q, scale, b = _int8_inputs(jax.random.PRNGKey(1), 8, 4, 2)
+    with pytest.raises(TypeError, match="int8"):
+        int8_matmul(x, w_q.astype(jnp.float32), scale, b, interpret=True)
+    with pytest.raises(ValueError, match="act"):
+        int8_matmul(x, w_q, scale, b, act="gelu", interpret=True)
+
+
+# ---------------------------------------------------------------------------
+# quantized serving engine
+# ---------------------------------------------------------------------------
+
+def test_engine_rejects_unknown_quantize(trained):
+    _, _, bundle = trained
+    with pytest.raises(ValueError, match="int8"):
+        sv.VFLServingEngine(bundle, quantize="int4")
+
+
+def test_int8_kernel_path_matches_dequant_engine_path(trained):
+    """``int8_active_apply`` (dequant-in-tile kernels) and the engine's
+    pre-dequantized fast path compute the same fp32 math — logits must
+    agree to float tolerance on real rows."""
+    sc, _, bundle = trained
+    x = np.asarray(sc.active.x[:64], np.float32)
+    eng = sv.VFLServingEngine(bundle, quantize="int8")
+    via_engine = eng.predict_active(x)
+    via_kernel = np.asarray(quant.int8_active_apply(eng.quant_params,
+                                                    jnp.asarray(x)))
+    np.testing.assert_allclose(via_kernel, via_engine, atol=1e-5,
+                               rtol=1e-5)
+
+
+def test_quantized_engine_within_pinned_bounds(trained):
+    """The shipped error bar: parity_report on real rows must sit inside
+    the module's pinned bounds (measured-with-headroom, module docstring),
+    and the export must actually compress the serving weights."""
+    sc, _, bundle = trained
+    rep = quant.parity_report(bundle, sc.active.x, sc.active.y,
+                              n_classes=sc.n_classes)
+    assert rep["scheme"] == "int8-symmetric-per-channel"
+    assert rep["compression"] > 3.0          # ~3.9x weight-bytes measured
+    assert rep["max_abs_logit_delta"] <= quant.MAX_LOGIT_DELTA, rep
+    assert rep["rel_logit_delta"] <= quant.MAX_REL_LOGIT_DELTA, rep
+    assert rep["f1_macro_delta"] <= quant.MAX_F1_DELTA, rep
+    assert rep["accuracy_delta"] <= quant.MAX_F1_DELTA, rep
+
+
+def test_int8_engine_shares_fp32_jit_cache(trained):
+    """The CPU fast path's whole point: the dequantized pytree has the
+    SAME structure and shapes as the fp32 path, so an int8 engine after a
+    warmed fp32 engine compiles NOTHING."""
+    sc, _, bundle = trained
+    x = np.asarray(sc.active.x[:32], np.float32)
+    fp32 = sv.VFLServingEngine(bundle)
+    fp32.predict_active(x)                   # warm the shared jit cache
+    q = sv.VFLServingEngine(bundle, quantize="int8")
+    assert (jax.tree_util.tree_structure(q._p_active)
+            == jax.tree_util.tree_structure(fp32._p_active))
+    with guards.compile_counter(budget=0, label="int8 twin predict"):
+        lq = q.predict_active(x)
+    assert lq.shape == fp32.predict_active(x).shape
