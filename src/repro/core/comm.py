@@ -26,6 +26,7 @@ class Transfer(NamedTuple):
     nbytes: int
     direction: str
     stage: str
+    dtype: str = "float32"
 
 
 @dataclass
@@ -34,19 +35,22 @@ class Channel:
     log: List[Transfer] = field(default_factory=list)
 
     def send(self, what: str, nbytes: int, *, direction: str = UPLINK,
-             stage: str | None = None):
+             stage: str | None = None, dtype: str = "float32"):
         """Record one transfer.  ``stage`` defaults to the prefix of
-        ``what`` before the first ``/`` (e.g. ``"step1/Z"`` -> ``step1``)."""
+        ``what`` before the first ``/`` (e.g. ``"step1/Z"`` -> ``step1``);
+        ``dtype`` labels the wire element type (``"sign1"`` for 1-bit sign
+        payloads) so quantized exchanges stay auditable per dtype."""
         if stage is None:
             stage = what.split("/", 1)[0]
-        self.log.append(Transfer(what, int(nbytes), direction, stage))
+        self.log.append(Transfer(what, int(nbytes), direction, stage, dtype))
 
     def send_array(self, what: str, arr, *, direction: str = UPLINK,
                    stage: str | None = None):
-        # actual wire size of the array; the protocol sends float32 (4 B)
-        # everywhere, matching the paper's analytic formulas below
+        # actual wire size AND dtype of the array: a quantized exchange
+        # hands an int8 payload here and is charged 1 B/element, not the
+        # fp32 4 B the paper's analytic formulas assume
         self.send(what, arr.size * arr.dtype.itemsize, direction=direction,
-                  stage=stage)
+                  stage=stage, dtype=str(arr.dtype))
 
     @property
     def total_bytes(self) -> int:
@@ -71,6 +75,12 @@ class Channel:
             out[t.stage] = out.get(t.stage, 0) + t.nbytes
         return out
 
+    def bytes_by_dtype(self) -> dict:
+        out: dict = {}
+        for t in self.log:
+            out[t.dtype] = out.get(t.dtype, 0) + t.nbytes
+        return out
+
     def summary(self) -> dict:
         """JSON-ready measured totals for this link."""
         by_dir = self.bytes_by_direction()
@@ -81,7 +91,41 @@ class Channel:
             "uplink_bytes": by_dir.get(UPLINK, 0),
             "downlink_bytes": by_dir.get(DOWNLINK, 0),
             "by_stage": self.bytes_by_stage(),
+            "by_dtype": self.bytes_by_dtype(),
         }
+
+
+def exchange_array(channel: Channel, what: str, z, *, transform=None,
+                   seed: int = 0, link: int = 0, direction: str = UPLINK):
+    """THE one-shot latent exchange, with an optional hardening hook.
+
+    ``transform=None`` is the paper's plain fp32 send: the array is
+    byte-accounted as-is and the receiver gets exactly what the sender
+    encoded.  A ``transform`` (an ``ExchangeTransform`` from
+    ``repro.robustness.defense`` — anything with an ``exchange`` method)
+    instead perturbs/quantizes the payload at the sender, accounts the
+    TRANSFORMED wire bytes (per-dtype), and returns the fp32 array the
+    receiver reconstructs — the active party must only ever consume this
+    return value.  ``seed``/``link`` make the transform's randomness
+    deterministic per run and per passive link."""
+    if transform is None:
+        channel.send_array(what, z, direction=direction)
+        return z
+    return transform.exchange(channel, what, z, seed=seed, link=link,
+                              direction=direction)
+
+
+def normalize_exchange(transform, n: int) -> list:
+    """Replica contract for the ``*_replicated`` entry points: one
+    transform shared by every replica, or exactly one per replica
+    (entries may be ``None`` — a mixed-defense lane grid)."""
+    if transform is None or hasattr(transform, "exchange"):
+        return [transform] * n
+    out = list(transform)
+    if len(out) != n:
+        raise ValueError(f"normalize_exchange: {len(out)} exchange "
+                         f"transforms for {n} replicas")
+    return out
 
 
 def summarize(channels: Iterable[Channel]) -> dict:

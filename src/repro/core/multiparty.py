@@ -120,9 +120,11 @@ def run_apcvfl_k(sc: VFLScenarioK, *, lam: float = HP.lam,
                  max_epochs: int = HP.max_epochs,
                  patience: int = HP.patience, lr: float = HP.lr,
                  use_kernel: bool = False,
-                 ablation: bool = False) -> RunResult:
+                 ablation: bool = False, exchange=None) -> RunResult:
     """K-party protocol; same feature set as the 2-party ``run_apcvfl``
-    (``ablation=True`` trains g3 without the distillation term)."""
+    (``ablation=True`` trains g3 without the distillation term;
+    ``exchange`` hardens every passive link's one-shot latent send — each
+    link derives its own transform randomness via its link index)."""
     key = jax.random.PRNGKey(seed)
     keys = jax.random.split(key, len(sc.passives) + 3)
     epochs = {}
@@ -157,7 +159,9 @@ def run_apcvfl_k(sc: VFLScenarioK, *, lam: float = HP.lam,
                                                    channels, r_ps)):
             epochs[f"g1_passive{i}"] = rp.epochs_run
             zp = ae.encode(rp.params, jnp.asarray(p.x[idx_p]))
-            ch.send_array(f"step1/Z_passive{i}_aligned", zp)  # THE exchange
+            zp = comm.exchange_array(                          # THE exchange
+                ch, f"step1/Z_passive{i}_aligned", zp,
+                transform=exchange, seed=seed, link=i)
             blocks.append(zp)
 
         # --- step 2 at the active party -------------------------------------
@@ -225,7 +229,7 @@ def run_apcvfl_k_replicated(scenarios, *, seeds, lam: float = HP.lam,
                             max_epochs: int = HP.max_epochs,
                             patience: int = HP.patience, lr: float = HP.lr,
                             use_kernel: bool = False,
-                            ablation: bool = False,
+                            ablation: bool = False, exchange=None,
                             mesh=None) -> List[RunResult]:
     """K-party protocol for S seed replicates of one grid cell, every
     stage one ``training.train_lanes`` dispatch: ALL parties of ALL seeds
@@ -245,6 +249,7 @@ def run_apcvfl_k_replicated(scenarios, *, seeds, lam: float = HP.lam,
                          f"for {S} seeds")
     if S == 0:
         return []
+    exchanges = comm.normalize_exchange(exchange, S)
     train_kw = dict(batch_size=batch_size, max_epochs=max_epochs,
                     patience=patience, lr=lr, mesh=mesh)
     K = len(scs[0].passives) + 1
@@ -286,7 +291,9 @@ def run_apcvfl_k_replicated(scenarios, *, seeds, lam: float = HP.lam,
                 rp = g1[K * i + j + 1]
                 epochs[i][f"g1_passive{j}"] = rp.epochs_run
                 zp = ae.encode(rp.params, jnp.asarray(p.x[idx_p]))
-                ch.send_array(f"step1/Z_passive{j}_aligned", zp)
+                zp = comm.exchange_array(
+                    ch, f"step1/Z_passive{j}_aligned", zp,
+                    transform=exchanges[i], seed=seeds[i], link=j)
                 blocks.append(zp)
             zps.append(jnp.concatenate(blocks[1:], axis=1))
             zjs.append(jnp.concatenate(blocks, axis=1).astype(jnp.float32))

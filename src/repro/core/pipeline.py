@@ -61,9 +61,17 @@ def run_apcvfl(sc: VFLScenario, *, lam: float = HP.lam, kind: str = HP.kind,
                seed: int = 0, batch_size: int = HP.batch_size,
                max_epochs: int = HP.max_epochs, patience: int = HP.patience,
                lr: float = HP.lr, use_kernel: bool = False,
-               ablation: bool = False) -> RunResult:
+               ablation: bool = False, exchange=None) -> RunResult:
     """Full protocol. ``ablation=True`` trains g3 WITHOUT the distillation
     term (paper's 'Ablation' curves — isolates the nonlinear-encoder gain).
+
+    ``exchange`` hardens the single latent exchange: an
+    ``ExchangeTransform`` (``repro.robustness.defense`` — DP noise,
+    quantization) applied at the sender.  Everything downstream of the
+    exchange (g2, g3, the serving artifacts) consumes the RECEIVED
+    latents, and the channel accounts the transformed wire bytes.
+    ``None`` (default) is the paper's plain fp32 exchange, bit-identical
+    to the pre-hook behavior.
     """
     key = jax.random.PRNGKey(seed)
     k1, k2, k3, k4 = jax.random.split(key, 4)
@@ -95,9 +103,11 @@ def run_apcvfl(sc: VFLScenario, *, lam: float = HP.lam, kind: str = HP.kind,
         zp_al = ae.encode(rp.params, jnp.asarray(xp[idx_p]))
 
         # THE single information exchange: passive -> active, aligned
-        # latents (byte accounting reads only shape/dtype — no host sync)
-        channel.send_array("step1/Z_passive_aligned", zp_al,
-                           direction="uplink")
+        # latents (byte accounting reads only shape/dtype — no host
+        # sync).  With a transform, zp_al becomes what the active party
+        # RECEIVED — the only form g2/g3/serving may ever see.
+        zp_al = comm.exchange_array(channel, "step1/Z_passive_aligned",
+                                    zp_al, transform=exchange, seed=seed)
 
         # --- Step 2: aligned (joint) representation learning ---------------
         zj = jnp.concatenate([za_al, zp_al], axis=1).astype(jnp.float32)
@@ -177,7 +187,8 @@ def run_apcvfl_replicated(scenarios, *, seeds, lam: float = HP.lam,
                           max_epochs: int = HP.max_epochs,
                           patience: int = HP.patience, lr: float = HP.lr,
                           use_kernel: bool = False,
-                          ablation: bool = False, mesh=None) -> list:
+                          ablation: bool = False, exchange=None,
+                          mesh=None) -> list:
     """Full protocol for S seed replicates of one grid cell, every stage
     one ``training.train_lanes`` dispatch: the two g1s of all seeds run as
     2S lanes, g2 as S lanes, g3 as S lanes — one compile and one host sync
@@ -193,12 +204,21 @@ def run_apcvfl_replicated(scenarios, *, seeds, lam: float = HP.lam,
     fused Eq. 5 Pallas kernel (``distill.make_lanes_loss(use_kernel=True)``
     — trainable since the kernel grew its closed-form custom VJP).
     ``mesh`` shards every stage's lane axis across devices (see
-    ``training.train_lanes``)."""
+    ``training.train_lanes``).
+
+    ``exchange`` is one ``ExchangeTransform`` shared by every replica or
+    a per-replica sequence (entries may be ``None``): a whole defense
+    grid — e.g. one sigma per lane via ``robustness.defense.dp_frontier``
+    — runs its g1/g2/g3 stages as lanes of the same vmapped scans, with
+    only the cheap eager exchange differing per lane.  Per-lane noise
+    keys derive from each lane's SEED (not its lane index), so a lane
+    matches ``run_apcvfl(sc, seed=s, exchange=t)`` exactly."""
     scs, seeds = _normalize_replicas("run_apcvfl_replicated", scenarios,
                                      seeds)
     S = len(seeds)
     if S == 0:
         return []
+    exchanges = comm.normalize_exchange(exchange, S)
     train_kw = dict(batch_size=batch_size, max_epochs=max_epochs,
                     patience=patience, lr=lr, mesh=mesh)
 
@@ -232,8 +252,9 @@ def run_apcvfl_replicated(scenarios, *, seeds, lam: float = HP.lam,
             epochs[i]["g1_passive"] = rp.epochs_run
             za_al = ae.encode(ra.params, jnp.asarray(sc.active.x[idx_a]))
             zp_al = ae.encode(rp.params, jnp.asarray(sc.passive.x[idx_p]))
-            ch.send_array("step1/Z_passive_aligned", zp_al,
-                          direction="uplink")
+            zp_al = comm.exchange_array(ch, "step1/Z_passive_aligned",
+                                        zp_al, transform=exchanges[i],
+                                        seed=seeds[i])
             zps.append(zp_al)
             zjs.append(jnp.concatenate([za_al, zp_al],
                                        axis=1).astype(jnp.float32))

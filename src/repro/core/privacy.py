@@ -18,6 +18,7 @@ tidy records.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
 
 import jax
@@ -72,6 +73,24 @@ def inversion_attack(z: np.ndarray, x: np.ndarray, *, n_aux: int,
         baseline_mse=float(var.mean()), attack_mse=float((err ** 2).mean()))
 
 
+def effective_n_aux(n_aux: int, n_rows: int) -> int:
+    """The auxiliary budget an attack can actually use on ``n_rows``
+    shared latents: at least 2 training pairs must exist and at least 20
+    held-out rows must remain to measure leakage on.  A clamp is a LOUD
+    event — a sweep that silently measured a smaller budget than its grid
+    said would mislabel the leakage curve's x-axis — so it warns, and
+    callers record both requested and effective values."""
+    eff = max(min(int(n_aux), n_rows - 20), 2)
+    if eff != n_aux:
+        warnings.warn(
+            f"inversion n_aux={n_aux} clamped to {eff}: only {n_rows} "
+            f"aligned latents are shared and 20 held-out rows are "
+            f"reserved for measurement (records carry n_aux_requested "
+            f"alongside the effective n_aux)", RuntimeWarning,
+            stacklevel=3)
+    return eff
+
+
 def leakage_curve(z: np.ndarray, x: np.ndarray, budgets=(10, 50, 200, 1000),
                   seed: int = 0) -> list:
     out = []
@@ -95,8 +114,9 @@ def run_inversion(sc, *, n_aux: int = 64, hidden: int = 128,
     in one spec.  The honest-but-curious active party then inverts those
     latents with an ``n_aux``-pair auxiliary budget.  ``metrics`` carries
     the leakage numbers (``r2_mean`` is the headline: 0 = paper's safe
-    regime, 1 = full reconstruction); ``n_aux`` is clamped so at least 20
-    held-out aligned rows remain to measure on."""
+    regime, 1 = full reconstruction); an infeasible ``n_aux`` is clamped
+    via ``effective_n_aux`` — which WARNS — and the record carries both
+    ``n_aux`` (effective) and ``n_aux_requested``."""
     xp = np.asarray(sc.passive.x)
     channel = comm.Channel()
     _, _, idx_p = psi(sc.active.ids, sc.passive.ids, channel=channel)
@@ -114,11 +134,14 @@ def run_inversion(sc, *, n_aux: int = 64, hidden: int = 128,
             f"held-out rows)")
     z = np.asarray(ae.encode(r1.params, jnp.asarray(x_al)))
     channel.send_array("step1/Z_passive_aligned", z, direction="uplink")
-    rep = inversion_attack(z, x_al, n_aux=max(min(n_aux, len(z) - 20), 2),
-                           hidden=hidden, max_epochs=max_epochs, seed=seed)
+    eff_n_aux = effective_n_aux(n_aux, len(z))
+    rep = inversion_attack(z, x_al, n_aux=eff_n_aux, hidden=hidden,
+                           max_epochs=max_epochs, seed=seed)
     metrics = {"r2_mean": rep.r2_mean, "attack_mse": rep.attack_mse,
                "baseline_mse": rep.baseline_mse,
-               "n_aux": float(rep.n_aux)}
+               "n_aux": float(rep.n_aux),
+               "n_aux_requested": float(n_aux),
+               "n_aux_clamped": float(rep.n_aux != n_aux)}
     return RunResult(method="inversion", metrics=metrics, rounds=1,
                      epochs={"g1_passive": r1.epochs_run},
                      comm=channel.summary(), seed=seed, z_dim=z.shape[1],

@@ -15,6 +15,8 @@ from repro.core.multiparty import VFLScenarioK
 from repro.experiments.registry import register_method, register_replicas
 from repro.experiments.results import RunResult
 from repro.experiments.specs import MethodSpec
+from repro.robustness import attacks as rb_attacks
+from repro.robustness import defense as rb_defense
 
 
 @register_method("local", supports_multiparty=True)
@@ -134,6 +136,53 @@ def _apcvfl_aligned_only_replicated(scenarios, spec: MethodSpec, *, seeds,
                                                        seeds=seeds,
                                                        mesh=mesh,
                                                        **spec.params)
+
+
+@register_method("apcvfl_dp", supports_multiparty=True,
+                 params_from=rb_defense.run_apcvfl_dp)
+def _apcvfl_dp(scenario, spec: MethodSpec, *, seed: int = 0) -> RunResult:
+    """The full protocol with a hardened exchange
+    (``repro.robustness.defense``): spec params sweep the defense knobs
+    (``sigma``, ``mechanism``, ``clip``, ``quantize``) alongside the
+    usual training hyperparameters.  With every defense off this is
+    bit-identical to ``apcvfl`` (pinned in tests/test_robustness.py)."""
+    return rb_defense.run_apcvfl_dp(scenario, seed=seed, **spec.params)
+
+
+@register_replicas("apcvfl_dp")
+def _apcvfl_dp_replicated(scenarios, spec: MethodSpec, *, seeds, mesh=None):
+    return rb_defense.run_apcvfl_dp_replicated(scenarios, seeds=seeds,
+                                               mesh=mesh, **spec.params)
+
+
+@register_method("attack_inversion",
+                 params_from=rb_attacks.run_attack_inversion)
+def _attack_inversion(scenario, spec: MethodSpec, *,
+                      seed: int = 0) -> RunResult:
+    """Registry attacks (``repro.robustness.attacks``): each runs the
+    protocol's attack surface under a chosen defense (same ``sigma`` /
+    ``clip`` / ``quantize`` knobs as ``apcvfl_dp``) and emits the shared
+    leakage schema — ``leakage`` in [0, 1] plus the attack's raw
+    statistic — so one spec sweeps defense strength against utility AND
+    leakage in the same tidy records."""
+    return rb_attacks.run_attack_inversion(scenario, seed=seed,
+                                           **spec.params)
+
+
+@register_method("attack_label_leak",
+                 params_from=rb_attacks.run_attack_label_leak)
+def _attack_label_leak(scenario, spec: MethodSpec, *,
+                       seed: int = 0) -> RunResult:
+    return rb_attacks.run_attack_label_leak(scenario, seed=seed,
+                                            **spec.params)
+
+
+@register_method("attack_membership",
+                 params_from=rb_attacks.run_attack_membership)
+def _attack_membership(scenario, spec: MethodSpec, *,
+                       seed: int = 0) -> RunResult:
+    return rb_attacks.run_attack_membership(scenario, seed=seed,
+                                            **spec.params)
 
 
 @register_method("splitnn", params_from=splitnn.run_splitnn)

@@ -71,6 +71,11 @@ def main(argv=None) -> int:
                     help="end-to-end latency SLO for the live runtime")
     ap.add_argument("--queue-rows", type=int, default=4096,
                     help="admission bound: queued rows beyond this shed")
+    ap.add_argument("--fault", default=None, metavar="PLAN.json",
+                    help="inject a robustness.faults.FaultPlan into the "
+                         "live runtime (requires --arrival poisson|"
+                         "bursty); events target tenant 'default' — see "
+                         "examples/faults/passive_dropout.json")
     ap.add_argument("--bundle", default=None,
                     help="save the exported bundle here and serve the "
                          "RELOADED copy (round-trip proof)")
@@ -84,6 +89,16 @@ def main(argv=None) -> int:
     if args.smoke:
         args.epochs = min(args.epochs, 2)
         args.requests = min(args.requests, 300)
+    plan = None
+    if args.fault:
+        if args.arrival == "stream":
+            ap.error("--fault needs the live runtime: use --arrival "
+                     "poisson or bursty (the backlog drain has no clock "
+                     "to trigger events on)")
+        from repro.robustness.faults import FaultPlan
+        plan = FaultPlan.load(args.fault)
+        print(f"fault plan {plan.name!r}: "
+              f"{len(plan.serving_events())} serving events")
 
     ds = make_dataset(args.dataset, seed=args.seed)
     if args.n_parties == 2:
@@ -163,7 +178,7 @@ def main(argv=None) -> int:
         runtime = rt.ServingRuntime(
             registry, rt.RuntimeConfig(slo_ms=args.slo_ms,
                                        max_queue_rows=args.queue_rows))
-        stats = runtime.run(stream)
+        stats = runtime.run(stream, faults=plan)
         lat = stats["latency_ms"]
         print(f"\n=== {args.arrival} arrivals at {args.rate_rps} req/s: "
               f"served {stats['served']}/{stats['requests']} requests "
@@ -181,6 +196,14 @@ def main(argv=None) -> int:
               f"{stats['shed_rate']}")
         print(f"compiled batch shapes: {stats['compiled']['by_path']} "
               f"(distinct: {stats['compiled']['distinct_batch_shapes']})")
+        if plan is not None:
+            fb = stats["faults"]["tenants"].get("default", {})
+            print(f"faults: applied {stats['faults']['events_applied']} "
+                  f"events, faulted={fb.get('faulted')}, "
+                  f"collab_while_faulted="
+                  f"{fb.get('collab_dispatches_while_faulted')}, "
+                  f"cache_stale={fb.get('cache_stale')}, "
+                  f"cache_version={fb.get('cache_version')}")
     else:
         engine = sv.VFLServingEngine(bundle, buckets=buckets,
                                      quantize=quantize)

@@ -318,14 +318,64 @@ class ServingRuntime:
 
     # --- the event loop ----------------------------------------------------
 
-    def run(self, stream: Sequence[TimedRequest]) -> dict:
+    def run(self, stream: Sequence[TimedRequest], *,
+            faults=None) -> dict:
         """Serve a merged timed stream to completion; returns the report
-        dict (shared ``serve.metrics`` schema, per-tenant + overall)."""
+        dict (shared ``serve.metrics`` schema, per-tenant + overall).
+
+        ``faults`` is a ``robustness.faults.FaultPlan`` (duck-typed: any
+        object whose ``serving_events()`` yields ``t_ms``-stamped
+        events).  Events fire at dispatch boundaries once the virtual
+        clock passes their timestamp: ``dropout``/``stale``/``drift``
+        invalidate the tenant's representation cache (subsequent lookups
+        miss, requests degrade to the active-only path — never stale
+        latents), ``recover`` re-installs the bundle's latents with a
+        version bump.  The report gains a ``"faults"`` block with
+        per-tenant accounting, including ``collab_dispatches_while_
+        faulted`` — the runtime's stale-serving violation counter, which
+        must stay 0."""
         cfg = self.config
         unknown = {tr.tenant for tr in stream} - set(self.registry.engines)
         if unknown:
             raise ValueError(f"stream names unregistered tenants "
                              f"{sorted(unknown)}")
+        fault_events: List = []
+        fault_state: Dict[str, dict] = {}
+        if faults is not None:
+            fault_events = list(faults.serving_events())
+            bad = {e.tenant for e in fault_events} \
+                - set(self.registry.engines)
+            if bad:
+                raise ValueError(f"fault plan names unregistered tenants "
+                                 f"{sorted(str(t) for t in bad)}")
+            for e in fault_events:
+                fault_state.setdefault(e.tenant, {
+                    "faulted": False, "kinds": [], "faulted_at_ms": None,
+                    "recovered_at_ms": None,
+                    "collab_dispatches_while_faulted": 0})
+        fi = 0
+
+        def apply_faults(t: float) -> None:
+            nonlocal fi
+            while fi < len(fault_events) and fault_events[fi].t_ms <= t:
+                ev = fault_events[fi]
+                fi += 1
+                engine = self.registry.engines[ev.tenant]
+                st = fault_state[ev.tenant]
+                if ev.kind == "recover":
+                    bundle = engine.bundle
+                    if bundle.supports_collaborative:
+                        engine.refresh_cache(bundle.cache_ids,
+                                             bundle.cache_z)
+                    st["faulted"] = False
+                    st["recovered_at_ms"] = float(ev.t_ms)
+                else:                      # dropout | stale | drift
+                    engine.invalidate_cache()
+                    if not st["faulted"]:
+                        st["faulted_at_ms"] = float(ev.t_ms)
+                    st["faulted"] = True
+                    st["kinds"].append(ev.kind)
+
         self.dispatch_log = []
         stream = sorted(stream, key=lambda tr: tr.t_arrival_ms)
         queues: Dict[str, deque] = {n: deque() for n in self.registry.names()}
@@ -356,6 +406,7 @@ class ServingRuntime:
 
         while i < n or any(queues.values()):
             admit_until(now)
+            apply_faults(now)
             # pick the dispatchable tenant with the oldest head-of-line
             # request: full bucket, queueing budget exhausted, or nothing
             # left to wait for (drain)
@@ -394,9 +445,16 @@ class ServingRuntime:
             engine = self.registry.engines[ready]
             x = np.concatenate([tr.req.x for tr in group])
             ids = _merge_ids([tr.req for tr in group])
+            c0 = engine.stats.dispatches.get("collab", 0)
             t0 = time.perf_counter()
             logits = engine.predict(x, ids)
             measured_ms = (time.perf_counter() - t0) * 1e3
+            st = fault_state.get(ready)
+            if st is not None and st["faulted"] and \
+                    engine.stats.dispatches.get("collab", 0) > c0:
+                # a faulted tenant served cached (stale) latents —
+                # the invariant robustbench gates on
+                st["collab_dispatches_while_faulted"] += 1
             service_ms = (measured_ms if self.service_model is None
                           else float(self.service_model(rows)))
             off = 0
@@ -413,8 +471,28 @@ class ServingRuntime:
                 ready, now, service_ms, group))
             # single executor: the clock is busy for the whole dispatch
             now += service_ms
+        # events stamped beyond the last dispatch still take effect (the
+        # cache state must reflect the WHOLE plan, not just the served
+        # window)
+        apply_faults(float("inf"))
         wall_s = time.perf_counter() - wall_t0
-        return self._report(served, shed, t_first, now, wall_s)
+        report = self._report(served, shed, t_first, now, wall_s)
+        if faults is not None:
+            tenants_block = {}
+            for name, st in fault_state.items():
+                engine = self.registry.engines[name]
+                tenants_block[name] = {
+                    **st,
+                    "cache_stale": bool(engine.cache is not None
+                                        and engine.cache.stale),
+                    "cache_version": engine.cache_version,
+                }
+            report["faults"] = {
+                "plan": getattr(faults, "name", "plan"),
+                "events_applied": fi,
+                "tenants": tenants_block,
+            }
+        return report
 
     # --- reporting ---------------------------------------------------------
 

@@ -160,7 +160,8 @@ def test_smoke_spec_uniform_runresults(smoke_results):
         assert isinstance(r, RunResult)
         assert 0.0 <= r.metrics["accuracy"] <= 1.0
         assert set(r.comm) == {"total_bytes", "total_mb", "transfers",
-                               "uplink_bytes", "downlink_bytes", "by_stage"}
+                               "uplink_bytes", "downlink_bytes", "by_stage",
+                               "by_dtype"}
         assert r.scenario["dataset"] == "bcw"
         assert r.scenario["n_aligned"] == 120
     rec_keys = [set(rec) for rec in tidy(results)]
@@ -258,6 +259,7 @@ def test_channel_summary_directions_and_stages():
     assert s["uplink_bytes"] == 80 + 160
     assert s["downlink_bytes"] == 100
     assert s["by_stage"] == {"psi": 180, "step1": 160}
+    assert s["by_dtype"] == {"float32": 340}   # send() defaults to fp32
     assert s["transfers"] == 3
     # aggregation across links sums bytes and merges stages
     agg = comm.summarize([ch, ch])

@@ -1,0 +1,391 @@
+"""Robustness & privacy subsystem tests (``repro.robustness``): exchange
+transforms and their wire accounting, the sigma=0 bit-identity pin, the
+attack registry's shared leakage schema, fault plans (JSON round-trip,
+training-time injection, mid-stream serving injection), and the
+``n_aux`` clamp-warning regression."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import comm, pipeline, privacy
+from repro.experiments.specs import ScenarioSpec
+from repro.experiments.sweeps import build_scenario
+from repro.robustness import attacks, defense, faults
+from repro.serve import runtime as rt
+from repro.serve import vfl as sv
+
+EPOCHS = 2          # subsystem correctness does not depend on convergence
+
+
+@pytest.fixture(scope="module")
+def sc():
+    return build_scenario(ScenarioSpec(dataset="bcw", n_aligned=120,
+                                       n_active_features=5, seed=0))
+
+
+@pytest.fixture(scope="module")
+def base_run(sc):
+    return pipeline.run_apcvfl(sc, seed=0, max_epochs=EPOCHS)
+
+
+def _trees_equal(a, b) -> bool:
+    return jax.tree_util.tree_all(jax.tree_util.tree_map(
+        lambda x, y: bool(jnp.array_equal(x, y)), a, b))
+
+
+# ---------------------------------------------------------------------------
+# defense transforms
+# ---------------------------------------------------------------------------
+
+def test_make_transform_identity_when_all_off():
+    assert defense.make_transform() is None
+    assert defense.make_transform(sigma=0.0, clip=None, quantize=None) is None
+    t = defense.make_transform(sigma=1.0, quantize="int8")
+    assert isinstance(t, defense.Chain) and len(t.stages) == 2
+    assert isinstance(defense.make_transform(sigma=1.0),
+                      defense.ClippedNoise)
+    assert isinstance(defense.make_transform(quantize="sign"),
+                      defense.Quantize)
+    with pytest.raises(ValueError, match="mechanism"):
+        defense.make_transform(sigma=1.0, mechanism="uniform")
+    with pytest.raises(ValueError, match="quantize mode"):
+        defense.make_transform(quantize="int4")
+    with pytest.raises(ValueError, match="clip must be positive"):
+        defense.make_transform(clip=-1.0)
+
+
+def test_apcvfl_dp_sigma0_bit_identical_to_plain(sc, base_run):
+    """The satellite pin: every defense off means the EXACT undefended
+    code path — params, metrics, and comm accounting all bit-equal."""
+    dp = defense.run_apcvfl_dp(sc, sigma=0.0, seed=0, max_epochs=EPOCHS)
+    assert dp.method == "apcvfl_dp"
+    assert _trees_equal(base_run.params, dp.params)
+    for k, v in base_run.metrics.items():
+        assert dp.metrics[k] == v
+    assert dp.comm == base_run.comm       # bytes, stages, dtypes identical
+    assert dp.metrics["dp_sigma"] == 0.0
+    assert dp.metrics["exchange_bytes"] \
+        == base_run.comm["by_stage"]["step1"]
+
+
+def test_clipped_noise_clips_and_is_seed_deterministic():
+    z = jnp.asarray(np.random.RandomState(0).randn(32, 8) * 5.0,
+                    jnp.float32)
+    clip_only = defense.ClippedNoise(sigma=0.0, clip=1.0)
+    ch = comm.Channel()
+    out = clip_only.exchange(ch, "step1/Z", z, seed=3)
+    norms = np.linalg.norm(np.asarray(out), axis=1)
+    assert np.all(norms <= 1.0 + 1e-5)
+    assert ch.summary()["by_dtype"] == {"float32": 32 * 8 * 4}
+
+    noisy = defense.ClippedNoise(sigma=1.0, clip=1.0)
+    a = noisy.exchange(comm.Channel(), "step1/Z", z, seed=3)
+    b = noisy.exchange(comm.Channel(), "step1/Z", z, seed=3)
+    assert np.array_equal(np.asarray(a), np.asarray(b))   # seeded
+    c = noisy.exchange(comm.Channel(), "step1/Z", z, seed=4)
+    d = noisy.exchange(comm.Channel(), "step1/Z", z, seed=3, link=1)
+    assert not np.array_equal(np.asarray(a), np.asarray(c))
+    assert not np.array_equal(np.asarray(a), np.asarray(d))  # per-link
+
+
+def test_quantize_wire_bytes_and_dtypes():
+    z = jnp.asarray(np.random.RandomState(1).randn(10, 4), jnp.float32)
+    ch = comm.Channel()
+    out = defense.Quantize("int8").exchange(ch, "step1/Z", z, seed=0)
+    s = ch.summary()
+    assert s["by_dtype"] == {"int8": 10 * 4, "float32": 4 * 4}
+    assert s["total_bytes"] == 40 + 16      # 4x smaller than 160 fp32
+    # dequantized output is close and fp32
+    assert out.dtype == jnp.float32
+    assert float(jnp.max(jnp.abs(out - z))) < float(jnp.max(jnp.abs(z))) / 64
+
+    ch2 = comm.Channel()
+    out2 = defense.Quantize("sign").exchange(ch2, "step1/Z", z, seed=0)
+    s2 = ch2.summary()
+    assert s2["by_dtype"] == {"sign1": 5, "float32": 16}   # ceil(40/8)
+    assert np.array_equal(np.sign(np.asarray(out2)), np.sign(np.asarray(z)))
+
+
+def test_exchange_array_and_normalize_contract():
+    ch = comm.Channel()
+    z = jnp.ones((6, 2), jnp.float32)
+    got = comm.exchange_array(ch, "step1/Z", z)     # transform=None: as-is
+    assert got is z
+    assert ch.summary()["by_dtype"] == {"float32": 48}
+    t = defense.Quantize("int8")
+    assert comm.normalize_exchange(None, 3) == [None, None, None]
+    assert comm.normalize_exchange(t, 2) == [t, t]
+    assert comm.normalize_exchange([None, t], 2) == [None, t]
+    with pytest.raises(ValueError, match="exchange"):
+        comm.normalize_exchange([t], 2)
+
+
+def test_dp_frontier_lanes_match_sequential(sc):
+    """Per-lane exchange keys derive from the SEED, so a defended lane of
+    the replicated path reproduces the sequential defended run."""
+    seq = defense.run_apcvfl_dp(sc, sigma=2.0, clip=1.0, seed=0,
+                                max_epochs=EPOCHS)
+    lanes = defense.dp_frontier(sc, [0.0, 2.0], clip=1.0, seed=0,
+                                max_epochs=EPOCHS)
+    assert [r.metrics["dp_sigma"] for r in lanes] == [0.0, 2.0]
+    # comm accounting is exact (eager bookkeeping, not lane-padded)
+    assert lanes[1].comm == seq.comm
+    for r in lanes:
+        assert r.method == "apcvfl_dp"
+        assert 0.0 <= r.metrics["accuracy"] <= 1.0
+    # defended lane tracks the sequential defended run's metrics within
+    # replica-lane tolerance
+    assert lanes[1].metrics["accuracy"] == pytest.approx(
+        seq.metrics["accuracy"], abs=0.05)
+
+
+def test_apcvfl_dp_quantized_kparty_accounts_every_link():
+    from repro.core import multiparty
+    from repro.data.synthetic import make_dataset
+    ds = make_dataset("bcw", seed=0)
+    sck = multiparty.make_scenario_k(ds, n_parties=3, n_active_features=5,
+                                     n_aligned=100, seed=0)
+    r = defense.run_apcvfl_dp(sck, quantize="int8", seed=0,
+                              max_epochs=1)
+    assert len(r.channels) == 2
+    for ch in r.channels:                   # each passive link quantized
+        assert ch.bytes_by_dtype().get("int8", 0) > 0
+
+
+# ---------------------------------------------------------------------------
+# n_aux clamp warning (satellite regression)
+# ---------------------------------------------------------------------------
+
+def test_effective_n_aux_warns_loudly_and_records(sc):
+    with pytest.warns(RuntimeWarning, match="clamped"):
+        assert privacy.effective_n_aux(10_000, 120) == 100
+    assert privacy.effective_n_aux(64, 120) == 64     # no warning path
+    with pytest.warns(RuntimeWarning, match="n_aux=1 clamped to 2"):
+        privacy.effective_n_aux(1, 120)
+    with pytest.warns(RuntimeWarning, match="clamped"):
+        r = privacy.run_inversion(sc, n_aux=10_000, max_epochs=1, seed=0)
+    assert r.metrics["n_aux"] == 100.0               # 120 aligned - 20
+    assert r.metrics["n_aux_requested"] == 10_000.0
+    assert r.metrics["n_aux_clamped"] == 1.0
+    r2 = privacy.run_inversion(sc, n_aux=32, max_epochs=1, seed=0)
+    assert r2.metrics["n_aux_clamped"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# attack registry
+# ---------------------------------------------------------------------------
+
+def test_attack_registry_schema_and_errors():
+    assert attacks.available_attacks() == ("inversion", "label_leak",
+                                           "membership")
+    with pytest.raises(KeyError, match="unknown attack"):
+        attacks.get_attack("gradient_leak")
+    with pytest.raises(ValueError, match="already registered"):
+        attacks.register_attack("inversion")(lambda s: None)
+
+
+def test_attacks_share_leakage_schema_and_defense_closes_them(sc):
+    ts = [None, defense.make_transform(sigma=8.0)]
+    surfaces = attacks.build_surfaces(sc, ts, seed=0, max_epochs=EPOCHS)
+    assert len(surfaces) == 2
+    reports = []
+    for s in surfaces:
+        reps = {n: attacks.run_attack(n, s, seed=0)
+                for n in attacks.available_attacks()}
+        reports.append(reps)
+        for rep in reps.values():
+            m = rep.metrics()
+            assert {"leakage", "success", "baseline",
+                    "n_aux"} <= set(m)
+            assert 0.0 <= m["leakage"] <= 1.0
+    clean, defended = reports
+    # undefended membership is ~total: aligned rows match their own
+    # exchanged latents at distance zero
+    assert clean["membership"].leakage >= 0.9
+    assert defended["membership"].leakage < clean["membership"].leakage
+    assert defended["inversion"].leakage <= clean["inversion"].leakage
+    # comm parity: the undefended surface's channel matches run_apcvfl's
+    # exchange accounting (same stage bytes)
+    assert surfaces[0].channel.summary()["by_stage"]["step1"] \
+        == 120 * surfaces[0].z_exch.shape[1] * 4
+
+
+def test_attack_run_wrappers_emit_runresults(sc):
+    r = attacks.run_attack_membership(sc, sigma=0.0, seed=0, max_epochs=1)
+    assert r.method == "attack_membership"
+    assert r.metrics["leakage"] >= 0.9 and r.metrics["dp_sigma"] == 0.0
+    assert r.comm["by_stage"]["step1"] > 0
+
+
+# ---------------------------------------------------------------------------
+# fault plans
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_json_round_trip_and_validation(tmp_path):
+    plan = faults.FaultPlan(name="p", seed=7, events=(
+        faults.FaultEvent(kind="dropout", t_ms=100.0, tenant="a"),
+        faults.FaultEvent(kind="stale", stage="exchange", epochs=2),
+        faults.FaultEvent(kind="recover", t_ms=50.0, tenant="a"),
+    ))
+    assert faults.FaultPlan.from_json(plan.to_json()) == plan
+    path = tmp_path / "plan.json"
+    plan.save(str(path))
+    assert faults.FaultPlan.load(str(path)) == plan
+    assert json.loads(plan.to_json())["events"][0]["kind"] == "dropout"
+    # serving events come back time-sorted
+    assert [e.t_ms for e in plan.serving_events()] == [50.0, 100.0]
+    assert len(plan.training_events()) == 1
+    with pytest.raises(ValueError, match="kind"):
+        faults.FaultEvent(kind="meteor", t_ms=1.0)
+    with pytest.raises(ValueError, match="exactly one trigger"):
+        faults.FaultEvent(kind="dropout")
+    with pytest.raises(ValueError, match="exactly one trigger"):
+        faults.FaultEvent(kind="dropout", t_ms=1.0, stage="exchange")
+    with pytest.raises(ValueError, match="serving-time"):
+        faults.FaultEvent(kind="recover", stage="exchange")
+    with pytest.raises(ValueError, match="unknown keys"):
+        faults.FaultEvent.from_dict({"kind": "dropout", "t_ms": 1.0,
+                                     "speed": 9})
+
+
+def test_training_fault_dropout_is_the_ablation(sc):
+    plan = faults.FaultPlan("d", events=(
+        faults.FaultEvent(kind="dropout", stage="exchange"),))
+    r = faults.run_faulted_apcvfl(sc, plan, seed=0, max_epochs=EPOCHS)
+    abl = pipeline.run_apcvfl(sc, seed=0, max_epochs=EPOCHS, ablation=True)
+    assert r.method == "apcvfl_faulted"
+    assert r.metrics["fault_dropout"] == 1.0
+    assert r.rounds == 0                       # no exchange ever happened
+    assert _trees_equal(r.params, abl.params)
+
+
+def test_training_fault_stale_and_drift_flags(sc):
+    stale = faults.run_faulted_apcvfl(
+        sc, faults.FaultPlan("s", events=(
+            faults.FaultEvent(kind="stale", stage="exchange", epochs=1),)),
+        seed=0, max_epochs=EPOCHS)
+    assert stale.metrics["fault_stale"] == 1.0 and stale.rounds == 1
+    drift = faults.run_faulted_apcvfl(
+        sc, faults.FaultPlan("dr", events=(
+            faults.FaultEvent(kind="drift", stage="exchange", drift=0.5),)),
+        seed=0, max_epochs=EPOCHS)
+    assert drift.metrics["fault_drift"] == 1.0 and drift.rounds == 1
+    for r in (stale, drift):
+        assert 0.0 <= r.metrics["accuracy"] <= 1.0
+        # the wire still carried one full fp32 latent exchange
+        assert r.comm["by_stage"]["step1"] > 0
+
+
+# ---------------------------------------------------------------------------
+# serving-time injection (deterministic virtual clock)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def serving(sc, base_run):
+    bundle = sv.export_bundle(base_run, sc, head_steps=60)
+    reg = rt.TenantRegistry()
+    reg.register("t0", bundle)
+    reg.register("t1", bundle)
+    reg.warmup()
+    return reg, bundle
+
+
+def _known_stream(sc, n, *, tenant, t0_ms=0.0, gap_ms=10.0):
+    """n single-row requests with REAL ids (cache candidates) arriving on
+    a fixed grid — fully deterministic collab routing."""
+    ids = np.asarray(sc.active.ids[:n], np.int64)
+    x = np.asarray(sc.active.x[:n], np.float32)
+    return [rt.TimedRequest(
+        sv.ServeRequest(i, x[i:i + 1], ids[i:i + 1]), tenant,
+        t0_ms + gap_ms * i) for i in range(n)]
+
+
+def test_midstream_fault_degrades_then_recovers(sc, serving):
+    reg, bundle = serving
+    reg.reset_stats()
+    stream = _known_stream(sc, 40, tenant="t0")       # arrivals at 0..390
+    plan = faults.FaultPlan("mid", events=(
+        faults.FaultEvent(kind="dropout", t_ms=150.0, tenant="t0"),
+        faults.FaultEvent(kind="recover", t_ms=250.0, tenant="t0"),
+    ))
+    runtime = rt.ServingRuntime(reg, rt.RuntimeConfig(slo_ms=50.0),
+                                service_model=lambda rows: 1.0)
+    report = runtime.run(stream, faults=plan)
+    assert report["served"] == 40
+    fb = report["faults"]["tenants"]["t0"]
+    assert report["faults"]["events_applied"] == 2
+    assert fb["kinds"] == ["dropout"]
+    assert fb["faulted_at_ms"] == 150.0
+    assert fb["recovered_at_ms"] == 250.0
+    # the invariant: while faulted, NEVER a collaborative dispatch
+    assert fb["collab_dispatches_while_faulted"] == 0
+    assert not fb["faulted"] and not fb["cache_stale"]
+    assert fb["cache_version"] == 2                   # recover bumped it
+    stats = reg["t0"].stats
+    # collab served before the fault AND after recovery; active-only
+    # dispatches happened in between (the degrade path)
+    assert stats.dispatches.get("collab", 0) > 0
+    assert stats.dispatches.get("active", 0) > 0
+
+
+def test_fault_without_recover_leaves_cache_stale(sc, serving):
+    reg, bundle = serving
+    reg.reset_stats()
+    stream = _known_stream(sc, 20, tenant="t1")
+    plan = faults.FaultPlan("stale", events=(
+        faults.FaultEvent(kind="stale", t_ms=95.0, tenant="t1"),))
+    runtime = rt.ServingRuntime(reg, rt.RuntimeConfig(slo_ms=50.0),
+                                service_model=lambda rows: 1.0)
+    report = runtime.run(stream, faults=plan)
+    fb = report["faults"]["tenants"]["t1"]
+    assert fb["faulted"] and fb["cache_stale"]
+    assert fb["collab_dispatches_while_faulted"] == 0
+    # degraded requests were actually served (active-only), none dropped
+    assert report["served"] == 20
+    # restore for other tests sharing the module-scoped registry
+    reg["t1"].refresh_cache(bundle.cache_ids, bundle.cache_z)
+
+
+def test_fault_plan_unknown_tenant_rejected_early(sc, serving):
+    reg, _ = serving
+    runtime = rt.ServingRuntime(reg, service_model=lambda rows: 1.0)
+    plan = faults.FaultPlan("ghost", events=(
+        faults.FaultEvent(kind="dropout", t_ms=1.0, tenant="nobody"),))
+    with pytest.raises(ValueError, match="unregistered tenants"):
+        runtime.run(_known_stream(sc, 3, tenant="t0"), faults=plan)
+
+
+def test_events_past_stream_end_still_apply(sc, serving):
+    reg, bundle = serving
+    reg.reset_stats()
+    stream = _known_stream(sc, 5, tenant="t0")        # ends ~t=40
+    plan = faults.FaultPlan("late", events=(
+        faults.FaultEvent(kind="dropout", t_ms=10_000.0, tenant="t0"),))
+    runtime = rt.ServingRuntime(reg, rt.RuntimeConfig(slo_ms=50.0),
+                                service_model=lambda rows: 1.0)
+    report = runtime.run(stream, faults=plan)
+    assert report["faults"]["events_applied"] == 1
+    assert report["faults"]["tenants"]["t0"]["cache_stale"]
+    # no serving happened while faulted, so no violations possible
+    assert report["faults"]["tenants"]["t0"][
+        "collab_dispatches_while_faulted"] == 0
+    reg["t0"].refresh_cache(bundle.cache_ids, bundle.cache_z)
+
+
+# ---------------------------------------------------------------------------
+# spec integration
+# ---------------------------------------------------------------------------
+
+def test_privacy_frontier_spec_parses_and_methods_registered():
+    from repro.experiments.registry import get_method
+    from repro.experiments.specs import ExperimentSpec
+    with open("examples/specs/privacy_frontier.json") as fh:
+        spec = ExperimentSpec.from_dict(json.load(fh))
+    names = {m.method for m in spec.methods}
+    assert {"apcvfl", "apcvfl_dp", "attack_inversion",
+            "attack_membership", "attack_label_leak"} <= names
+    for m in spec.methods:
+        get_method(m.method)               # registered + params validated
